@@ -1,0 +1,59 @@
+"""Aggregate dry-run artifacts into the §Roofline table (markdown + CSV).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and
+emits one row per (arch x shape x mesh): the three roofline terms, the
+dominant bottleneck, and the useful-FLOPs ratio.  Also used by
+benchmarks.run to print the summary CSV.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HEADERS = ["arch", "shape", "mesh", "kind", "compute_s", "memory_s",
+           "collective_s", "dominant", "useful_ratio", "compile_s"]
+
+
+def load_cells(d: str = "experiments/dryrun"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def row(c: dict) -> list:
+    r = c["roofline"]
+    return [c["arch"], c["shape"], c["mesh"], c["kind"],
+            f"{r['compute_s']:.3e}", f"{r['memory_s']:.3e}",
+            f"{r['collective_s']:.3e}", r["dominant"],
+            f"{min(c.get('useful_flops_ratio', 0), 99):.2f}",
+            f"{c.get('compile_s', 0):.0f}"]
+
+
+def markdown_table(cells) -> str:
+    lines = ["| " + " | ".join(HEADERS) + " |",
+             "|" + "---|" * len(HEADERS)]
+    for c in cells:
+        lines.append("| " + " | ".join(str(x) for x in row(c)) + " |")
+    return "\n".join(lines)
+
+
+def print_csv(d: str = "experiments/dryrun"):
+    cells = load_cells(d)
+    if not cells:
+        print("roofline.no_artifacts,0.00,run scripts/dryrun_all.py first")
+        return
+    for c in cells:
+        if c.get("overrides"):
+            continue
+        r = c["roofline"]
+        print(f"roofline.{c['arch']}.{c['shape']}.{c['mesh']},0.00,"
+              f"compute={r['compute_s']:.2e}s memory={r['memory_s']:.2e}s "
+              f"collective={r['collective_s']:.2e}s "
+              f"dominant={r['dominant']} "
+              f"useful={c.get('useful_flops_ratio', 0):.2f}")
+
+
+ALL = [print_csv]

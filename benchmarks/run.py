@@ -1,0 +1,24 @@
+"""Benchmark harness: one function per paper table + system benches.
+
+Prints ``name,us_per_call,derived`` CSV.  Sections:
+  paper_tables    -- Tables II..X area/timing reproductions (area model)
+  kernel_bench    -- core/kernel/system microbenchmarks
+  roofline_report -- dry-run roofline summary (reads experiments/dryrun)
+"""
+import sys
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from . import paper_tables, kernel_bench, roofline_report
+    for section in (paper_tables, kernel_bench, roofline_report):
+        for fn in section.ALL:
+            try:
+                fn()
+            except Exception as e:      # a bench failure must not hide others
+                print(f"{section.__name__}.{fn.__name__},0.00,ERROR:{e!r}",
+                      file=sys.stdout)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,42 @@
+"""Quickstart: the paper's folded multipliers as a JAX library.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import limbs as L
+from repro.core import MCIMConfig, mcim_mul, planner, area_model
+
+
+def main():
+    # -- multiply two 128-bit integers with every architecture ----------
+    a_int = 0xDEADBEEF_CAFEBABE_01234567_89ABCDEF
+    b_int = 0xFEEDFACE_8BADF00D_00C0FFEE_DEADC0DE
+    a = jnp.asarray(L.to_limbs(a_int, 8))[None]
+    b = jnp.asarray(L.to_limbs(b_int, 8))[None]
+    expect = a_int * b_int
+    for cfg in [MCIMConfig(arch="star", ct=1),
+                MCIMConfig(arch="fb", ct=2),
+                MCIMConfig(arch="fb", ct=4),
+                MCIMConfig(arch="ff", ct=2),
+                MCIMConfig(arch="karatsuba", ct=3, levels=2)]:
+        out = L.from_limbs(np.asarray(mcim_mul(a, b, cfg))[0])
+        status = "OK " if out == expect else "FAIL"
+        print(f"{status} {cfg.arch:10s} ct={cfg.ct} -> 0x{out:064x}")
+
+    # -- the paper's area story ------------------------------------------
+    print("\nArea savings vs Star (32x32, FB architecture, Table VII):")
+    for ct in (2, 3, 4, 8):
+        s = area_model.savings_vs_star(32, 32, MCIMConfig(arch="fb", ct=ct))
+        print(f"  CT={ct}: TP=1/{ct}, saves {s:.0%} silicon")
+
+    # -- fractional-throughput planning (use case 1, Sec. V-E) -----------
+    plan = planner.plan_throughput(32, 32, 3.5)
+    conv = planner.star_bank_area(32, 32, 3.5)
+    print(f"\nTP=3.5 multipliers/cycle: {plan.describe()}")
+    print(f"  vs conventional 4x Star bank: saves {1 - plan.area/conv:.0%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Batched serving example: continuous batching over prefill/decode.
+
+  PYTHONPATH=src python examples/serve_quant.py
+"""
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    outputs = serve_main(["--arch", "gemma3-1b", "--smoke",
+                          "--requests", "6", "--slots", "2",
+                          "--prompt-len", "16", "--max-new", "8"])
+    assert len(outputs) == 6
+    assert all(len(toks) >= 8 for toks in outputs.values())
+
+
+if __name__ == "__main__":
+    main()

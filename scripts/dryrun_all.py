@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""Driver for the full dry-run matrix: one subprocess per cell (isolated
+XLA state), resumable (skips cells whose JSON artifact already exists).
+
+  python scripts/dryrun_all.py --out experiments/dryrun [--mesh pod1]
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# smallest models first: bank results early
+ARCH_ORDER = [
+    "gemma3-1b", "mamba2-370m", "zamba2-1.2b", "hubert-xlarge",
+    "paligemma-3b", "minitron-8b", "gemma2-9b", "qwen3-32b",
+    "llama4-scout-17b-a16e", "dbrx-132b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+SKIPS = {
+    ("hubert-xlarge", "decode_32k"), ("hubert-xlarge", "long_500k"),
+    ("qwen3-32b", "long_500k"), ("minitron-8b", "long_500k"),
+    ("gemma2-9b", "long_500k"), ("dbrx-132b", "long_500k"),
+    ("llama4-scout-17b-a16e", "long_500k"), ("paligemma-3b", "long_500k"),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="", help="pod1|pod2|'' (both)")
+    ap.add_argument("--timeout", type=int, default=3000)
+    ap.add_argument("--only-arch", default="")
+    args = ap.parse_args()
+
+    meshes = [args.mesh] if args.mesh else ["pod1", "pod2"]
+    os.makedirs(args.out, exist_ok=True)
+    log = open(os.path.join(args.out, "driver.log"), "a")
+
+    cells = [(a, s, m) for m in meshes for a in ARCH_ORDER for s in SHAPES
+             if (a, s) not in SKIPS
+             and (not args.only_arch or a == args.only_arch)]
+    done = failed = 0
+    for arch, shape, mesh in cells:
+        path = os.path.join(args.out, f"{arch}_{shape}_{mesh}.json")
+        if os.path.exists(path):
+            done += 1
+            continue
+        t0 = time.time()
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--mesh", mesh,
+               "--out", args.out]
+        env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+        print(f"[driver] {arch} {shape} {mesh} ...", flush=True)
+        try:
+            r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                               timeout=args.timeout, cwd=ROOT)
+        except subprocess.TimeoutExpired:
+            print(f"[driver] TIMEOUT {arch} {shape} {mesh}", flush=True)
+            log.write(f"TIMEOUT {arch} {shape} {mesh}\n")
+            log.flush()
+            failed += 1
+            continue
+        dt = time.time() - t0
+        if r.returncode == 0:
+            done += 1
+            tail = r.stdout.strip().splitlines()[-1] if r.stdout else ""
+            print(f"[driver] ok ({dt:.0f}s): {tail}", flush=True)
+            log.write(f"OK {arch} {shape} {mesh} {dt:.0f}s\n")
+        else:
+            failed += 1
+            print(f"[driver] FAIL ({dt:.0f}s) {arch} {shape} {mesh}",
+                  flush=True)
+            log.write(f"FAIL {arch} {shape} {mesh}\n"
+                      + r.stderr[-3000:] + "\n")
+        log.flush()
+    print(f"[driver] complete: {done} ok, {failed} failed / {len(cells)}")
+
+
+if __name__ == "__main__":
+    main()

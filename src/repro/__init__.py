@@ -1,0 +1,9 @@
+"""repro: Multi-Cycle folded Integer Multipliers (MCIM) as a TPU-native
+JAX framework -- core arithmetic, Pallas kernels, a 10-arch model zoo,
+and a multi-pod training/serving runtime.
+
+Reproduction of: Houraniah, Ugurdag, Dedeagac, "Efficient Multi-Cycle
+Folded Integer Multipliers" (2023), adapted from ASIC folding to TPU
+temporal folding (see DESIGN.md).
+"""
+__version__ = "1.0.0"

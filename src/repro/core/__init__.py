@@ -1,0 +1,24 @@
+"""Core MCIM library: multi-cycle folded integer multipliers in JAX.
+
+Public API:
+  limbs            -- limb representation + PPM / compressor / final adders
+  mcim_mul         -- configurable folded multiply (fb/ff/karatsuba/star)
+  MCIMConfig       -- generator parameters (arch, ct, levels, adder, signed)
+  make_multiplier  -- jitted fixed-width multiplier factory
+  mul32x32_64      -- 32x32->64 multiply on uint32 lanes (for RNG / exact)
+  planner          -- design-point selection (paper Table VIII policy)
+  area_model       -- ASIC-area cost model used by benchmarks/
+"""
+from . import limbs
+from . import area_model
+from . import planner
+from .mcim import MCIMConfig, mcim_mul, make_multiplier, mul32x32_64
+from .schoolbook import star_mul, feedback_mul, feedforward_mul
+from .karatsuba import karatsuba_mul, karatsuba_ppm
+
+__all__ = [
+    "limbs", "area_model", "planner",
+    "MCIMConfig", "mcim_mul", "make_multiplier", "mul32x32_64",
+    "star_mul", "feedback_mul", "feedforward_mul",
+    "karatsuba_mul", "karatsuba_ppm",
+]

@@ -1,0 +1,262 @@
+"""Limb representation of wide unsigned integers for TPU-native arithmetic.
+
+The paper (Houraniah et al., "Efficient Multi-Cycle Folded Integer
+Multipliers") builds multipliers out of three hardware stages:
+
+    PPM (partial-product multiplier, no final addition)
+      -> compressor (carry-save tree, no carry propagation)
+        -> final adder (single carry-propagating addition)
+
+The TPU-native analogue implemented here represents an N-bit unsigned
+integer as a little-endian vector of 16-bit *limbs* stored in uint32
+lanes.  A "carry-save" value is a vector of uint32 *column sums* in
+radix 2**16: the represented value is sum(cols[k] * 2**(16*k)) where the
+individual columns may exceed 16 bits.  This redundant form is the
+direct analogue of the paper's carry-save rows:
+
+  * PPM        == limb-wise 16x16->32 products split into lo/hi halves,
+                  scattered into columns *without* carry propagation.
+  * compressor == integer addition of column-sum vectors (deferred
+                  carries; exact because columns stay below 2**32).
+  * final adder== one carry-propagation pass turning column sums back
+                  into canonical 16-bit limbs.
+
+All ops are batched over arbitrary leading axes; the limb axis is the
+last axis, index 0 = least significant limb.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+RADIX_BITS = 16
+RADIX = 1 << RADIX_BITS
+MASK = RADIX - 1
+LIMB_DTYPE = jnp.uint32
+
+# Maximum number of carry-save terms that may be accumulated into one
+# uint32 column before overflow becomes possible.  Each term contributes
+# < 2**16, so 2**16 terms are always safe.  Real designs in this repo
+# accumulate far fewer (2 * n_limbs * CT at most).
+MAX_CARRY_SAVE_TERMS = 1 << RADIX_BITS
+
+
+def n_limbs_for_bits(bits: int) -> int:
+    """Number of 16-bit limbs needed to hold ``bits`` bits."""
+    return -(-bits // RADIX_BITS)
+
+
+def to_limbs(value: int, n_limbs: int) -> np.ndarray:
+    """Convert a Python int to a little-endian uint32 limb vector."""
+    if value < 0:
+        raise ValueError("unsigned only")
+    if value >> (RADIX_BITS * n_limbs):
+        raise ValueError(f"{value} does not fit in {n_limbs} limbs")
+    out = np.zeros((n_limbs,), dtype=np.uint32)
+    for k in range(n_limbs):
+        out[k] = (value >> (RADIX_BITS * k)) & MASK
+    return out
+
+
+def from_limbs(limbs) -> int:
+    """Convert a 1-D limb vector (canonical or carry-save) to a Python int."""
+    limbs = np.asarray(limbs)
+    total = 0
+    for k in range(limbs.shape[-1]):
+        total += int(limbs[k]) << (RADIX_BITS * k)
+    return total
+
+
+def batch_to_limbs(values, n_limbs: int) -> np.ndarray:
+    """Convert an iterable of Python ints to a (B, n_limbs) uint32 array."""
+    return np.stack([to_limbs(int(v), n_limbs) for v in values])
+
+
+def batch_from_limbs(limbs) -> list:
+    limbs = np.asarray(limbs)
+    flat = limbs.reshape(-1, limbs.shape[-1])
+    return [from_limbs(row) for row in flat]
+
+
+def random_limbs(rng: np.random.Generator, shape, bits: int) -> np.ndarray:
+    """Uniform random ``bits``-bit integers as limb arrays of matching width."""
+    n = n_limbs_for_bits(bits)
+    out = rng.integers(0, RADIX, size=tuple(shape) + (n,), dtype=np.uint32)
+    rem = bits - (n - 1) * RADIX_BITS
+    out[..., -1] &= (1 << rem) - 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PPM: partial-product "multiplier" producing carry-save column sums.
+# ---------------------------------------------------------------------------
+
+def _ppm_scatter_indices(la: int, lb: int):
+    """Column indices for lo/hi halves of every limb product (static)."""
+    i = np.arange(la)[:, None]
+    j = np.arange(lb)[None, :]
+    lo_idx = (i + j).reshape(-1)          # lo half of a[i]*b[j] lands in col i+j
+    hi_idx = lo_idx + 1                   # hi half lands in col i+j+1
+    return jnp.asarray(lo_idx), jnp.asarray(hi_idx)
+
+
+def ppm(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Partial-product multiplier: carry-save column sums of a*b.
+
+    a: (..., LA) uint32 canonical 16-bit limbs
+    b: (..., LB) uint32 canonical 16-bit limbs
+    returns (..., LA+LB) uint32 column sums (redundant / carry-save form).
+
+    This is the analogue of DW02_multp / the RoCoCo PPM: it produces the
+    product *without* the final carry-propagating addition.
+    """
+    la, lb = a.shape[-1], b.shape[-1]
+    prod = a[..., :, None] * b[..., None, :]        # exact: <2**32
+    lo = (prod & MASK).reshape(*prod.shape[:-2], la * lb)
+    hi = (prod >> RADIX_BITS).reshape(*prod.shape[:-2], la * lb)
+    lo_idx, hi_idx = _ppm_scatter_indices(la, lb)
+    cols = jnp.zeros(prod.shape[:-2] + (la + lb,), dtype=LIMB_DTYPE)
+    cols = cols.at[..., lo_idx].add(lo)
+    cols = cols.at[..., hi_idx].add(hi)
+    return cols
+
+
+def ppm_op_count(la: int, lb: int) -> int:
+    """Number of 16x16 limb products a PPM of this size instantiates.
+
+    This is the area proxy for the PPM stage (see core.area_model)."""
+    return la * lb
+
+
+# ---------------------------------------------------------------------------
+# Compressor: carry-save addition of column-sum vectors.
+# ---------------------------------------------------------------------------
+
+def compress(terms, width: int) -> jax.Array:
+    """Sum carry-save vectors (optionally shifted) into ``width`` columns.
+
+    ``terms`` is a list of (cols, shift_limbs) pairs.  This is the 3:2 /
+    4:2 / 5:2 compressor analogue: pure column addition, no carry
+    propagation.  Shifts are static.
+    """
+    batch = jnp.broadcast_shapes(*[t[0].shape[:-1] for t in terms])
+    acc = jnp.zeros(batch + (width,), dtype=LIMB_DTYPE)
+    for cols, shift in terms:
+        n = cols.shape[-1]
+        take = min(n, width - shift)
+        if take <= 0:
+            continue
+        acc = acc.at[..., shift:shift + take].add(cols[..., :take])
+    return acc
+
+
+def shift_cols(cols: jax.Array, shift: int, width: int) -> jax.Array:
+    """Place ``cols`` at limb offset ``shift`` inside a ``width``-wide vector."""
+    return compress([(cols, shift)], width)
+
+
+def negate_cols(limbs: jax.Array, shift: int, width: int):
+    """Two's-complement encoding of -(limbs << 16*shift) mod 2**(16*width).
+
+    ``limbs`` must be canonical (16-bit) limbs.  Mirrors the paper's
+    handling of Karatsuba subtraction: NOT every bit, then add 1 -- both
+    folded into the compressor.  Returns (cols, +1 correction column sum)
+    to be added into an accumulator; the wrap-around 2**(16*width) term
+    vanishes in the final adder's modular truncation.
+    """
+    n = limbs.shape[-1]
+    full = jnp.full(limbs.shape[:-1] + (width,), MASK, dtype=LIMB_DTYPE)
+    placed = shift_cols(limbs, shift, width)
+    inverted = full - placed            # NOT of the shifted value, columnwise
+    one = jnp.zeros(limbs.shape[:-1] + (width,), dtype=LIMB_DTYPE).at[..., 0].add(1)
+    return inverted, one
+
+
+# ---------------------------------------------------------------------------
+# Final adders.
+# ---------------------------------------------------------------------------
+
+def final_adder_1ca(cols: jax.Array, out_limbs: int | None = None) -> jax.Array:
+    """Single-pass carry-propagating final adder ("1CA" in the paper).
+
+    Sequential carry propagation over the limb axis via lax.scan; result
+    is truncated (mod 2**(16*out_limbs)) like fixed-width hardware.
+    """
+    width = cols.shape[-1]
+    out_limbs = width if out_limbs is None else out_limbs
+    cols_t = jnp.moveaxis(cols, -1, 0)               # (width, ...)
+    carry0 = jnp.zeros(cols.shape[:-1], dtype=LIMB_DTYPE)
+
+    def step(carry, col):
+        tot = col + carry
+        return tot >> RADIX_BITS, tot & MASK
+
+    _, limbs_t = jax.lax.scan(step, carry0, cols_t)
+    limbs = jnp.moveaxis(limbs_t, 0, -1)
+    if out_limbs <= width:
+        return limbs[..., :out_limbs]
+    pad = jnp.zeros(limbs.shape[:-1] + (out_limbs - width,), dtype=LIMB_DTYPE)
+    return jnp.concatenate([limbs, pad], axis=-1)
+
+
+def final_adder_3ca(cols: jax.Array, out_limbs: int | None = None) -> jax.Array:
+    """3-cycle resource-shared final adder ("3CA").
+
+    The paper folds the final adder over 3 cycles using a feedback loop
+    around 1/3rd of the full-adder cells.  Analogue: propagate carries
+    over one third of the limb axis per cycle, carrying the running
+    carry across cycles.  Functionally identical to 1CA; it exists so
+    the area model and the folded kernels can represent the 1/3-width
+    adder design point.
+    """
+    width = cols.shape[-1]
+    out_limbs = width if out_limbs is None else out_limbs
+    third = -(-width // 3)
+    padded = width if width % third == 0 else (width // third + 1) * third
+    if padded != width:
+        cols = jnp.concatenate(
+            [cols, jnp.zeros(cols.shape[:-1] + (padded - width,), LIMB_DTYPE)],
+            axis=-1)
+    carry = jnp.zeros(cols.shape[:-1], dtype=LIMB_DTYPE)
+    pieces = []
+    for c in range(padded // third):                # the multi-cycle feedback loop
+        seg = cols[..., c * third:(c + 1) * third]
+        seg_t = jnp.moveaxis(seg, -1, 0)
+
+        def step(cin, col):
+            tot = col + cin
+            return tot >> RADIX_BITS, tot & MASK
+
+        carry, seg_out_t = jax.lax.scan(step, carry, seg_t)
+        pieces.append(jnp.moveaxis(seg_out_t, 0, -1))
+    limbs = jnp.concatenate(pieces, axis=-1)[..., :width]
+    if out_limbs <= width:
+        return limbs[..., :out_limbs]
+    pad = jnp.zeros(limbs.shape[:-1] + (out_limbs - width,), dtype=LIMB_DTYPE)
+    return jnp.concatenate([limbs, pad], axis=-1)
+
+
+FINAL_ADDERS = {"1ca": final_adder_1ca, "3ca": final_adder_3ca}
+
+
+# ---------------------------------------------------------------------------
+# Canonical-form helpers.
+# ---------------------------------------------------------------------------
+
+def add_canonical(a: jax.Array, b: jax.Array, out_limbs: int) -> jax.Array:
+    """Exact addition of canonical limb vectors (via compressor + 1CA)."""
+    width = max(a.shape[-1], b.shape[-1]) + 1
+    acc = compress([(a, 0), (b, 0)], width)
+    return final_adder_1ca(acc, out_limbs)
+
+
+def pad_limbs(a: jax.Array, n: int) -> jax.Array:
+    """Zero-pad the limb axis up to n limbs."""
+    cur = a.shape[-1]
+    if cur == n:
+        return a
+    if cur > n:
+        raise ValueError(f"cannot shrink {cur} -> {n}")
+    pad = jnp.zeros(a.shape[:-1] + (n - cur,), dtype=LIMB_DTYPE)
+    return jnp.concatenate([a, pad], axis=-1)

@@ -1,0 +1,119 @@
+"""Top-level MCIM API: configurable multi-cycle folded integer multiply.
+
+``mcim_mul`` is the user-facing entry point mirroring the paper's
+generator parameters: architecture (fb / ff / karatsuba), CT (cycle
+time, = 1/throughput), Karatsuba recursion levels, and final adder.
+
+All functions operate on batched little-endian 16-bit-limb uint32
+arrays (see core.limbs) and are jit/vmap/pjit-compatible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import limbs as L
+from .schoolbook import star_mul, feedback_mul, feedforward_mul
+from .karatsuba import karatsuba_mul
+
+ARCHS = ("star", "fb", "ff", "karatsuba")
+
+
+@dataclasses.dataclass(frozen=True)
+class MCIMConfig:
+    """Generator parameters (paper Sec. IV)."""
+    arch: str = "fb"          # star | fb | ff | karatsuba
+    ct: int = 2               # cycle time == 1/throughput
+    levels: int = 1           # Karatsuba recursion levels (Karat-K)
+    adder: str = "1ca"        # 1ca | 3ca
+    signed: bool = False      # two's-complement operands
+
+    def __post_init__(self):
+        if self.arch not in ARCHS:
+            raise ValueError(f"arch must be one of {ARCHS}")
+        if self.arch == "star" and self.ct != 1:
+            raise ValueError("star is single-cycle")
+        if self.arch == "karatsuba" and self.ct != 3:
+            raise ValueError("Karatsuba MCIM uses CT=3")
+        if self.adder not in L.FINAL_ADDERS:
+            raise ValueError(f"adder must be one of {tuple(L.FINAL_ADDERS)}")
+        if self.adder == "3ca" and self.ct < 3:
+            raise ValueError("3CA usable only by designs with TP <= 1/3")
+
+
+def mcim_mul(a: jax.Array, b: jax.Array,
+             config: MCIMConfig | None = None, **kw) -> jax.Array:
+    """Multiply limb vectors a (..., LA) x b (..., LB) -> (..., LA+LB).
+
+    Unsigned by default; ``config.signed`` interprets operands as
+    two's-complement of their limb width and returns the low LA+LB limbs
+    of the signed product (standard wrapping semantics).
+    """
+    cfg = config or MCIMConfig(**kw)
+    if cfg.signed:
+        return _signed_mul(a, b, dataclasses.replace(cfg, signed=False))
+    if cfg.arch == "star":
+        return star_mul(a, b, adder=cfg.adder)
+    if cfg.arch == "fb":
+        return feedback_mul(a, b, ct=cfg.ct, adder=cfg.adder)
+    if cfg.arch == "ff":
+        return feedforward_mul(a, b, ct=cfg.ct, adder=cfg.adder)
+    return karatsuba_mul(a, b, levels=cfg.levels, ct=cfg.ct, adder=cfg.adder)
+
+
+def _signed_mul(a: jax.Array, b: jax.Array, cfg: MCIMConfig) -> jax.Array:
+    """Signed (two's-complement) extension, paper Sec. I.
+
+    For P-limb operands interpreted mod 2**(16P):
+      signed(a)*signed(b) == a*b - (a<0)*b*2**(16LA) - (b<0)*a*2**(16LB)
+    (mod 2**(16(LA+LB))), i.e. subtract the sign corrections from the
+    unsigned product -- implemented with the same compressor/complement
+    machinery as Karatsuba's subtractions.
+    """
+    la, lb = a.shape[-1], b.shape[-1]
+    width = la + lb
+    prod = mcim_mul(a, b, cfg)
+    a_neg = (a[..., -1] >> (L.RADIX_BITS - 1)) & 1       # sign bits
+    b_neg = (b[..., -1] >> (L.RADIX_BITS - 1)) & 1
+    corr_b = jnp.where(a_neg[..., None].astype(jnp.bool_), b, 0)
+    corr_a = jnp.where(b_neg[..., None].astype(jnp.bool_), a, 0)
+    nb, ob = L.negate_cols(corr_b, la, width)
+    na, oa = L.negate_cols(corr_a, lb, width)
+    acc = L.compress([(prod, 0), (nb, 0), (ob, 0), (na, 0), (oa, 0)], width)
+    return L.final_adder_1ca(acc, width)
+
+
+# Convenience fixed-width wrappers -------------------------------------------
+
+def make_multiplier(bits_a: int, bits_b: int,
+                    config: MCIMConfig | None = None, **kw):
+    """Return a jitted multiplier for fixed operand widths (bits)."""
+    cfg = config or MCIMConfig(**kw)
+    la, lb = L.n_limbs_for_bits(bits_a), L.n_limbs_for_bits(bits_b)
+
+    @jax.jit
+    def mul(a, b):
+        assert a.shape[-1] == la and b.shape[-1] == lb
+        return mcim_mul(a, b, cfg)
+
+    return mul
+
+
+@functools.partial(jax.jit, static_argnames=("arch", "ct"))
+def mul32x32_64(a32: jax.Array, b32: jax.Array, arch: str = "ff",
+                ct: int = 2) -> tuple[jax.Array, jax.Array]:
+    """32x32 -> 64-bit multiply on uint32 lanes (lo, hi) via 16-bit limbs.
+
+    TPUs have no native 64-bit integer multiply; this builds one from the
+    MCIM machinery.  Used by repro.rng (Philox) and repro.exact.
+    """
+    a = jnp.stack([a32 & L.MASK, a32 >> 16], axis=-1).astype(jnp.uint32)
+    b = jnp.stack([b32 & L.MASK, b32 >> 16], axis=-1).astype(jnp.uint32)
+    p = mcim_mul(a, b, MCIMConfig(arch=arch, ct=ct) if arch != "star"
+                 else MCIMConfig(arch="star", ct=1))
+    lo = p[..., 0] | (p[..., 1] << 16)
+    hi = p[..., 2] | (p[..., 3] << 16)
+    return lo, hi

@@ -1,0 +1,111 @@
+"""Schoolbook multipliers: Star baseline, Feedback (FB) and Feed-Forward (FF).
+
+These are the JAX analogues of the paper's Section III architectures.
+
+Folding ("multi-cycle") is expressed with ``lax.fori_loop`` / ``lax.scan``
+over chunks of the second operand B: every iteration re-uses the *same*
+PPM + compressor + final-adder computation, exactly as the hardware
+re-uses the same silicon over CT clock cycles.  On TPU the win is the
+same trade the paper makes: the per-step working set (VMEM footprint,
+live registers, HLO size) shrinks by ~1/CT in exchange for a throughput
+of 1/CT results per step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import limbs as L
+
+
+def _chunk_limbs(lb: int, ct: int) -> int:
+    """Limbs per B-chunk for a CT-cycle folded design (ceil(LB/CT))."""
+    return -(-lb // ct)
+
+
+def star_mul(a: jax.Array, b: jax.Array, adder: str = "1ca") -> jax.Array:
+    """Single-cycle multiplier (the '*' operator / "Star" baseline).
+
+    Full-width PPM -> compressor (implicit in column sums) -> final adder.
+    """
+    la, lb = a.shape[-1], b.shape[-1]
+    cols = L.ppm(a, b)
+    return L.FINAL_ADDERS[adder](cols, la + lb)
+
+
+def feedback_mul(a: jax.Array, b: jax.Array, ct: int = 2,
+                 adder: str = "1ca") -> jax.Array:
+    """Feedback (FB) architecture, paper Fig. 1.  Any CT >= 2.
+
+    Per cycle t (LSB chunk first):
+      cols  = PPM(A, B_t)                           # M x ceil(N/CT) PPM
+      acc   = cols + (prev normalized result >> chunk limbs)   # compressor
+      r     = final_adder(acc)                      # M + N/CT adder
+      out[t*chunk : (t+1)*chunk] = r[:chunk]        # low limbs retire
+    After CT cycles the remaining high limbs of r complete the product.
+
+    The feedback loop forces the carry-propagating adder inside the loop,
+    which is why the paper restricts FB to the 1CA adder.
+    """
+    if ct < 2:
+        raise ValueError("FB is a multi-cycle design: ct >= 2")
+    if adder != "1ca":
+        raise ValueError("FB supports only the 1CA final adder (feedback loop)")
+    la, lb = a.shape[-1], b.shape[-1]
+    chunk = _chunk_limbs(lb, ct)
+    b_pad = L.pad_limbs(b, chunk * ct)
+    batch = jnp.broadcast_shapes(a.shape[:-1], b.shape[:-1])
+    a = jnp.broadcast_to(a, batch + (la,))
+    b_pad = jnp.broadcast_to(b_pad, batch + (chunk * ct,))
+
+    # b chunks stacked on a leading scan axis: (ct, ..., chunk)
+    b_chunks = jnp.moveaxis(
+        b_pad.reshape(batch + (ct, chunk)), -2, 0)
+
+    width = la + chunk + 1            # compressor / final adder width (M + N/CT + cy)
+    r0 = jnp.zeros(batch + (width,), dtype=L.LIMB_DTYPE)
+
+    def cycle(r_prev, b_t):
+        cols = L.ppm(a, b_t)                          # (..., la+chunk)
+        shifted = r_prev[..., chunk:]                 # feedback, >> chunk limbs
+        acc = L.compress([(cols, 0), (shifted, 0)], width)
+        r = L.final_adder_1ca(acc, width)
+        return r, r[..., :chunk]                      # retire low limbs
+
+    r_final, low_parts = jax.lax.scan(cycle, r0, b_chunks)
+    # low_parts: (ct, ..., chunk) -> (..., ct*chunk)
+    low = jnp.moveaxis(low_parts, 0, -2).reshape(batch + (ct * chunk,))
+    out = jnp.concatenate([low, r_final[..., chunk:]], axis=-1)
+    return out[..., :la + lb]
+
+
+def feedforward_mul(a: jax.Array, b: jax.Array, ct: int = 2,
+                    adder: str = "1ca") -> jax.Array:
+    """Feed-Forward (FF) architecture, paper Fig. 2.
+
+    No feedback loop: all CT partial-product passes run first (the same
+    PPM re-used each cycle, results held in "registers" = scan outputs),
+    then a single 2*CT:2 compressor + final adder finish the product.
+    Fully pipelineable; area-efficient at CT=2 (paper Sec. III-C) --
+    larger CT inflates the register file and compressor, which the area
+    model reflects.
+    """
+    if ct < 2:
+        raise ValueError("FF is a multi-cycle design: ct >= 2")
+    la, lb = a.shape[-1], b.shape[-1]
+    chunk = _chunk_limbs(lb, ct)
+    b_pad = L.pad_limbs(b, chunk * ct)
+    batch = jnp.broadcast_shapes(a.shape[:-1], b.shape[:-1])
+    a = jnp.broadcast_to(a, batch + (la,))
+    b_pad = jnp.broadcast_to(b_pad, batch + (chunk * ct,))
+    b_chunks = jnp.moveaxis(b_pad.reshape(batch + (ct, chunk)), -2, 0)
+
+    def ppm_pass(_, b_t):                             # shared PPM, no feedback
+        return None, L.ppm(a, b_t)
+
+    _, parts = jax.lax.scan(ppm_pass, None, b_chunks)  # (ct, ..., la+chunk)
+
+    width = la + ct * chunk + 1
+    terms = [(parts[t], t * chunk) for t in range(ct)]  # 2*CT:2 compressor
+    acc = L.compress(terms, width)
+    return L.FINAL_ADDERS[adder](acc, la + lb)

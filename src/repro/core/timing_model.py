@@ -1,0 +1,93 @@
+"""Timing / synthesis-pressure model for the strict-timing tables.
+
+We cannot run Synopsys DC here, so the strict-timing reproduction uses a
+two-part parametric model, calibrated ONCE on the paper's own Star data
+points and then applied unchanged to every MCIM design (so all MCIM
+numbers are predictions, not fits):
+
+  1. critical path  t_comb(class, bits) = T0 * (1 + S * log2(bits/B0))
+     -- one (T0, B0) anchor per design class from the paper's Tables
+     V/VIII, shared slope S.
+  2. synthesis stress: meeting a target below a design's relaxed path
+     forces larger cells / deeper pipelines; the paper's Star rows give
+     stress(16b: 10ns->0.31ns) = 5178/1348 = 3.84x and
+     stress(128b: 10ns->0.8ns) = 121634/66319 = 1.83x.  We model
+         stress = (t_comb / t_target) ** GAMMA   (>= 1)
+     and fit GAMMA on those two Star anchors.
+
+  Pipelineable designs (Star, FF, Karatsuba with 1CA) can always meet
+  timing by adding latency (retiming); feedback-loop designs (FB, 3CA)
+  cannot pipeline through the loop, so they MISS targets below t_comb --
+  reproducing the paper's Table IV structure where FB misses 0.31 ns.
+"""
+from __future__ import annotations
+
+import math
+
+# critical-path anchors (ns @ TSMC 40nm, from the paper's tables)
+_ANCHORS = {
+    # class: (T0_ns, B0_bits)
+    "star": (1.00, 16),       # Table VIII: Star 16x16 meets 1.00 ns, L=1
+    "fb": (0.46, 16),         # Table IV: FB CT2 reaches 0.46 ns at 16b
+                              # (predicts 0.85 at 128b vs Table V's 0.80)
+    "ff": (0.55, 16),         # FF stage path (between pipeline regs)
+    "karatsuba": (0.54, 128), # Table V: Karat-1 1CA -> 0.54 ns
+    "array": (1.40, 16),      # array multipliers are slower per bit
+}
+_SLOPE = 0.28                 # shared log2 width slope
+
+
+def t_comb(design_class: str, bits: int) -> float:
+    t0, b0 = _ANCHORS[design_class]
+    return t0 * max(0.3, 1.0 + _SLOPE * math.log2(max(bits, 2) / b0))
+
+
+def _fit_gamma() -> float:
+    # two Star anchors: (bits, t_target, stress)
+    pts = [(16, 0.31, 5178 / 1348), (128, 0.80, 121634 / 66319)]
+    gs = []
+    for bits, tgt, stress in pts:
+        ratio = t_comb("star", bits) / tgt
+        gs.append(math.log(stress) / math.log(ratio))
+    return sum(gs) / len(gs)
+
+
+GAMMA = _fit_gamma()
+
+
+def pipelineable(design_class: str, adder: str = "1ca") -> bool:
+    if design_class in ("star", "ff", "array"):
+        return True
+    if design_class == "karatsuba":
+        return adder == "1ca"   # the 3CA feedback loop blocks retiming
+    return False                # fb
+
+
+def meets_timing(design_class: str, bits: int, t_target: float,
+                 adder: str = "1ca") -> bool:
+    if pipelineable(design_class, adder):
+        return True
+    return t_comb(design_class, bits) <= t_target * 1.10
+
+
+def stress(design_class: str, bits: int, t_target: float) -> float:
+    """Area multiplier for synthesizing at t_target vs relaxed timing.
+
+    SHARED across design classes (keyed on the Star critical path): the
+    paper's own data shows Star and FF inflate by the same ratio at a
+    given (width, target) -- 1.83x for both at 128b/0.8ns -- because
+    tight targets force faster cells on *every* design being squeezed
+    into the same clock, regardless of its relaxed slack.  design_class
+    is kept in the signature for meets_timing symmetry."""
+    ratio = t_comb("star", bits) / t_target
+    return max(1.0, ratio ** GAMMA)
+
+
+def latency_at(design_class: str, bits: int, t_target: float,
+               ct: int) -> int:
+    """Pipeline depth needed: ceil(t_comb / t_target) extra stages."""
+    base = ct if design_class != "star" else 1
+    if t_target >= t_comb(design_class, bits):
+        return base
+    stages = math.ceil(t_comb(design_class, bits) / t_target) - 1
+    return base + stages

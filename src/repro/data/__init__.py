@@ -1,0 +1,5 @@
+from .pipeline import DataConfig, SyntheticLM, PatternLM, BinTokenFile, make_source, \
+    device_batch
+
+__all__ = ["DataConfig", "SyntheticLM", "PatternLM", "BinTokenFile", "make_source",
+           "device_batch"]

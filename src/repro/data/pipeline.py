@@ -1,0 +1,135 @@
+"""Deterministic, shardable data pipeline.
+
+Two sources behind one iterator interface:
+
+  * SyntheticLM   -- Philox counter-RNG token streams (repro.rng): batch
+    i of host h is a pure function of (seed, step, h), so restart /
+    elastic re-shard never replays or skips data and needs no state.
+  * BinTokenFile  -- memory-mapped packed token file (.bin uint16/32)
+    with deterministic Philox shuffling of window offsets.
+
+Batches are *global*: each host materializes only its slice
+(process_index-based), then device_put with the batch sharding -- the
+standard multi-host JAX pattern (works identically on 1 host here).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..rng import random_tokens, random_u32
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    source: str = "synthetic"       # synthetic | binfile
+    path: str = ""
+
+
+class SyntheticLM:
+    """Infinite deterministic LM batches; resume = set step."""
+
+    def __init__(self, cfg: DataConfig, host_index: int = 0,
+                 host_count: int = 1):
+        assert cfg.global_batch % host_count == 0
+        self.cfg = cfg
+        self.host_batch = cfg.global_batch // host_count
+        self.host_index = host_index
+        self._tok = jax.jit(
+            lambda offs: random_tokens(cfg.seed, 1, offs, cfg.vocab_size))
+
+    def batch_at(self, step: int) -> dict:
+        cfg = self.cfg
+        n = self.host_batch * (cfg.seq_len + 1)
+        base = (step * cfg.global_batch
+                + self.host_index * self.host_batch) * (cfg.seq_len + 1)
+        offs = jnp.arange(base, base + n, dtype=jnp.uint32)
+        toks = np.asarray(self._tok(offs)).reshape(
+            self.host_batch, cfg.seq_len + 1)
+        return {
+            "tokens": toks[:, :-1].astype(np.int32),
+            "labels": toks[:, 1:].astype(np.int32),
+            "mask": np.ones((self.host_batch, cfg.seq_len), np.float32),
+        }
+
+
+class PatternLM(SyntheticLM):
+    """Learnable synthetic stream: token_{t+1} = (token_t + 1) % V.
+
+    Deterministic (Philox start token per sequence); a working model
+    drives CE to ~0 within tens of steps -- used by convergence tests
+    and the end-to-end example to prove the training loop learns.
+    """
+
+    def batch_at(self, step: int) -> dict:
+        cfg = self.cfg
+        base = step * cfg.global_batch + self.host_index * self.host_batch
+        starts = np.asarray(random_u32(
+            cfg.seed, 3,
+            jnp.arange(base, base + self.host_batch, dtype=jnp.uint32)
+        ))[:, 0] % cfg.vocab_size
+        t = np.arange(cfg.seq_len + 1)
+        toks = ((starts[:, None] + t[None, :]) % cfg.vocab_size
+                ).astype(np.int32)
+        return {
+            "tokens": toks[:, :-1],
+            "labels": toks[:, 1:],
+            "mask": np.ones((self.host_batch, cfg.seq_len), np.float32),
+        }
+
+
+class BinTokenFile:
+    """Memory-mapped token corpus with deterministic window shuffling."""
+
+    def __init__(self, cfg: DataConfig, host_index: int = 0,
+                 host_count: int = 1, dtype=np.uint16):
+        self.cfg = cfg
+        self.data = np.memmap(cfg.path, dtype=dtype, mode="r")
+        self.n_windows = (len(self.data) - 1) // cfg.seq_len
+        assert self.n_windows >= 1, "corpus shorter than one window"
+        self.host_batch = cfg.global_batch // host_count
+        self.host_index = host_index
+
+    def batch_at(self, step: int) -> dict:
+        cfg = self.cfg
+        idx0 = (step * cfg.global_batch + self.host_index * self.host_batch)
+        sample_ids = np.arange(idx0, idx0 + self.host_batch, dtype=np.uint32)
+        # Philox-shuffled window assignment (deterministic, stateless)
+        rnd = np.asarray(random_u32(cfg.seed, 2, jnp.asarray(sample_ids)))
+        windows = rnd[:, 0] % self.n_windows
+        toks = np.stack([
+            self.data[w * cfg.seq_len: w * cfg.seq_len + cfg.seq_len + 1]
+            for w in windows]).astype(np.int32)
+        return {
+            "tokens": toks[:, :-1],
+            "labels": toks[:, 1:],
+            "mask": np.ones((self.host_batch, cfg.seq_len), np.float32),
+        }
+
+
+def make_source(cfg: DataConfig, host_index: int = 0, host_count: int = 1):
+    if cfg.source == "synthetic":
+        return SyntheticLM(cfg, host_index, host_count)
+    if cfg.source == "pattern":
+        return PatternLM(cfg, host_index, host_count)
+    return BinTokenFile(cfg, host_index, host_count)
+
+
+def device_batch(batch: dict, mesh, batch_sharding=None) -> dict:
+    """Host batch -> sharded global arrays on the mesh."""
+    if mesh is None:
+        return {k: jnp.asarray(v) for k, v in batch.items()}
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    out = {}
+    for k, v in batch.items():
+        spec = P(data_axes) if v.ndim >= 1 else P()
+        out[k] = jax.device_put(v, NamedSharding(mesh, spec))
+    return out

@@ -1,0 +1,111 @@
+"""Bit-exact deterministic reductions via 128-bit fixed-point limbs.
+
+Floating-point summation is not associative, so data-parallel gradient
+all-reduces give run-to-run (and topology-to-topology) different bits --
+a real obstacle to reproducible large-scale training.  The MCIM limb
+machinery gives us the fix: encode each f32 into 128-bit two's-complement
+fixed point (16-bit limbs, 2^-40 resolution), reduce in the *integer*
+domain (exact, associative, order-invariant -- the compressor's
+carry-free column sums survive any reduction tree), and carry-propagate
+once at the end (the final adder).
+
+  f32 -> fixed is exact up to one deterministic rounding (power-of-two
+  scaling is exact in FP; only the final round-to-integer quantizes).
+  fixed -> f32 rounds once more.  Everything in between is exact.
+
+Used by runtime.trainer's ``exact_accum`` mode for cross-microbatch and
+cross-replica gradient accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..core import limbs as L
+
+N_LIMBS = 8          # 128 bits
+FRAC_BITS = 40       # resolution 2^-40; integer headroom 2^(87)
+_TOP_BIT = jnp.uint32(0x8000)
+
+
+@functools.partial(jax.jit, static_argnames=("frac_bits", "n_limbs"))
+def f32_to_fixed(x: jax.Array, frac_bits: int = FRAC_BITS,
+                 n_limbs: int = N_LIMBS) -> jax.Array:
+    """f32 (...,) -> (..., n_limbs) uint32 two's-complement fixed point."""
+    x = jnp.where(jnp.isfinite(x), x, 0.0).astype(jnp.float32)
+    sign = x < 0
+    ax = jnp.abs(x)
+    m, e = jnp.frexp(ax)                       # ax = m * 2^e, m in [0.5, 1)
+    mi = jnp.round(m * (1 << 24)).astype(jnp.uint32)      # 24-bit mantissa
+    shift = e - 24 + frac_bits                 # value = mi * 2^shift
+    # negative shift: truncate low bits of the mantissa
+    neg = jnp.maximum(-shift, 0).astype(jnp.uint32)
+    mi = jnp.where(neg < 32, mi >> jnp.minimum(neg, 31), 0)
+    shift = jnp.maximum(shift, 0)
+
+    k0 = (shift // 16).astype(jnp.int32)       # limb offset
+    r = (shift % 16).astype(jnp.uint32)        # intra-limb bit offset
+    mi_lo = mi & 0xFFFF
+    mi_hi = mi >> 16
+    s_lo = mi_lo << r                          # < 2^31
+    s_hi = mi_hi << r                          # < 2^24
+    p0 = s_lo & 0xFFFF
+    p1 = (s_lo >> 16) + (s_hi & 0xFFFF)
+    p2 = s_hi >> 16
+
+    k = jnp.arange(n_limbs)
+    tgt = k0[..., None]
+    kk = jnp.broadcast_to(k, tgt.shape[:-1] + (n_limbs,))
+    mag = (jnp.where(kk == tgt, p0[..., None], 0)
+           + jnp.where(kk == tgt + 1, p1[..., None], 0)
+           + jnp.where(kk == tgt + 2, p2[..., None], 0)).astype(jnp.uint32)
+
+    # two's complement for negatives: NOT + 1, carry-propagated
+    comp = (jnp.uint32(0xFFFF) - mag)
+    comp = comp.at[..., 0].add(1)
+    comp = L.final_adder_1ca(comp, n_limbs)
+    return jnp.where(sign[..., None], comp, mag)
+
+
+@functools.partial(jax.jit, static_argnames=("frac_bits",))
+def fixed_to_f32(limbs: jax.Array, frac_bits: int = FRAC_BITS) -> jax.Array:
+    """(..., n_limbs) two's-complement column sums -> f32 (deterministic)."""
+    n = limbs.shape[-1]
+    norm = L.final_adder_1ca(limbs, n)         # canonical mod 2^(16n)
+    neg = (norm[..., -1] & _TOP_BIT) != 0
+    comp = (jnp.uint32(0xFFFF) - norm).at[..., 0].add(1)
+    comp = L.final_adder_1ca(comp, n)
+    mag = jnp.where(neg[..., None], comp, norm)
+    scale = 2.0 ** (16.0 * jnp.arange(n) - frac_bits)
+    val = jnp.sum(mag.astype(jnp.float32) * scale.astype(jnp.float32),
+                  axis=-1)
+    return jnp.where(neg, -val, val)
+
+
+def fixed_add(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Carry-free accumulation (columns stay < 2^32 for < 2^16 terms)."""
+    return a + b
+
+
+def exact_sum(x: jax.Array, axis: int = 0) -> jax.Array:
+    """Order-invariant sum over ``axis``: same bits for any permutation."""
+    fixed = f32_to_fixed(x)
+    acc = jnp.sum(fixed.astype(jnp.uint32), axis=axis, dtype=jnp.uint32)
+    return fixed_to_f32(acc)
+
+
+def exact_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """Deterministic psum (use inside shard_map): integer-domain reduce."""
+    fixed = f32_to_fixed(x)
+    acc = jax.lax.psum(fixed.astype(jnp.int32), axis_name)
+    return fixed_to_f32(acc.astype(jnp.uint32))
+
+
+def exact_tree_sum(trees: list):
+    """Deterministic elementwise sum of a list of pytrees (microbatches)."""
+    def one(*leaves):
+        stacked = jnp.stack([l.astype(jnp.float32) for l in leaves])
+        return exact_sum(stacked, axis=0)
+    return jax.tree_util.tree_map(one, *trees)

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the performance-critical integer hot spots.
+
+  mcim_fold     -- multi-cycle folded big-int multiplier (FB architecture)
+  int8_matmul   -- quantized matmul with folded K accumulation
+  karatsuba_ppm -- combinational Karatsuba PPM (paper Fig. 4)
+  prefix_adder  -- Brent-Kung parallel-prefix final adder (fast 1CA)
+
+All ship a jnp oracle (ref.py) and run under interpret=True on CPU.
+"""
+from . import mcim_fold
+from . import int8_matmul
+from . import karatsuba_ppm
+from . import prefix_adder
+
+__all__ = ["mcim_fold", "int8_matmul", "karatsuba_ppm", "prefix_adder"]

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: int8 x int8 -> bf16 matmul with folded K accumulation.
+
+This is the MCIM idea applied to the matmul reduction dimension: the
+MXU-tile product (the "PPM") is instantiated once and folded over
+K/BLOCK_K sequential grid steps; the int32 VMEM accumulator plays the
+compressor (carry-free accumulation); the dequantizing scale/add on the
+final step is the final adder.  The per-step VMEM working set is
+bm*bk + bk*bn + bm*bn instead of bm*K + K*bn + bm*bn -- the same
+area-for-throughput fold as the paper's FB multiplier, with CT = K/bk.
+
+Used by repro.quant for int8 serving matmuls and by the int8 gradient
+compression path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, w_ref, sx_ref, sw_ref, out_ref, acc_ref, *, n_k):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # PPM + compressor: one MXU-tile pass, carry-free int32 accumulation.
+    x = x_ref[...].astype(jnp.int32)     # (bm, bk) int8 widened in-regs
+    w = w_ref[...].astype(jnp.int32)     # (bk, bn)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    # Final adder: dequantize once, on the last fold step.
+    @pl.when(k == n_k - 1)
+    def _finalize():
+        sx = sx_ref[...]                 # (bm, 1) per-row scale
+        sw = sw_ref[...]                 # (1, bn) per-col scale
+        out_ref[...] = (acc_ref[...].astype(jnp.float32) * sx * sw
+                        ).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "interpret"))
+def int8_matmul(x: jax.Array, w: jax.Array, sx: jax.Array, sw: jax.Array,
+                *, block_m: int = 256, block_n: int = 256, block_k: int = 256,
+                out_dtype=jnp.bfloat16, interpret: bool = True) -> jax.Array:
+    """(M, K) int8 @ (K, N) int8 -> (M, N) out_dtype, with row/col scales.
+
+    sx: (M,) float32 per-row (activation) scales
+    sw: (N,) float32 per-col (weight) scales
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"shape {(m, k, n)} not divisible by "
+                         f"blocks {(bm, bk, bn)}")
+    n_k = k // bk
+    kernel = functools.partial(_matmul_kernel, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x, w, sx.reshape(m, 1).astype(jnp.float32),
+      sw.reshape(1, n).astype(jnp.float32))

@@ -1,0 +1,37 @@
+"""Public quantize/matmul/dequantize ops built on the int8 kernel."""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import int8_matmul
+from .ref import int8_matmul_ref
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
+
+
+def quantize_rows(x: jax.Array, axis: int = -1):
+    """Symmetric per-row int8 quantization: returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
+    scale = jnp.where(amax == 0, 1.0, amax / 127.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale.squeeze(axis)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "block"))
+def quantized_matmul(x: jax.Array, w: jax.Array, use_kernel: bool = True,
+                     block: int = 128) -> jax.Array:
+    """bf16/f32 (M,K) @ (K,N) through int8 with per-row/col scales."""
+    qx, sx = quantize_rows(x, axis=1)          # per-row of x
+    qw, sw = quantize_rows(w, axis=0)          # per-col of w
+    m, k = qx.shape
+    n = qw.shape[1]
+    if use_kernel and m % min(block, m) == 0 and n % min(block, n) == 0 \
+            and k % min(block, k) == 0:
+        return int8_matmul(qx, qw, sx, sw, block_m=block, block_n=block,
+                           block_k=block, interpret=INTERPRET)
+    return int8_matmul_ref(qx, qw, sx, sw)

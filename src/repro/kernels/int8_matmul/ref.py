@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the int8 matmul kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def int8_matmul_ref(x: jax.Array, w: jax.Array, sx: jax.Array, sw: jax.Array,
+                    out_dtype=jnp.bfloat16) -> jax.Array:
+    acc = jnp.matmul(x.astype(jnp.int32), w.astype(jnp.int32))
+    out = (acc.astype(jnp.float32)
+           * sx.reshape(-1, 1).astype(jnp.float32)
+           * sw.reshape(1, -1).astype(jnp.float32))
+    return out.astype(out_dtype)

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: combinational Karatsuba PPM (paper Fig. 4).
+
+One Karatsuba level inside a single kernel invocation: the three
+half-width partial products T0=A0*B0, T1=A1*B1, T2=(A0+A1)(B0+B1) are
+computed from ONE half-width PPM routine (the fold is spatial here --
+the hardware's combinational PPM -- while mcim_fold realizes the
+temporal CT=3 fold), combined with the 10:2-compressor placement
+pattern T1<<2h + (T2-T1-T0)<<h + T0 using the NOT+1 two's-complement
+trick, and carry-propagated once.
+
+Grid: (batch_tiles,).  Demonstrates the sub-quadratic limb-product
+count on TPU: 3*(h+1)^2 lane multiplies instead of (2h)^2.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import limbs as L
+
+MASK = L.MASK
+RADIX_BITS = L.RADIX_BITS
+
+
+def _ppm_cols(a, b, la, lb, width):
+    """Half-width PPM: (TB, la) x (TB, lb) -> (TB, width) column sums."""
+    acc = jnp.zeros((a.shape[0], width), jnp.uint32)
+    for j in range(lb):
+        p = a * b[:, j:j + 1]
+        acc = acc.at[:, j:j + la].add(p & MASK)
+        acc = acc.at[:, j + 1:j + la + 1].add(p >> RADIX_BITS)
+    return acc
+
+
+def _carry_propagate(cols, out_limbs):
+    carry = jnp.zeros((cols.shape[0],), jnp.uint32)
+    outs = []
+    for k in range(out_limbs):
+        tot = (cols[:, k] if k < cols.shape[1] else 0) + carry
+        outs.append(tot & MASK)
+        carry = tot >> RADIX_BITS
+    return jnp.stack(outs, axis=1)
+
+
+def _kara_kernel(a_ref, b_ref, out_ref, *, n, half):
+    a = a_ref[...]                      # (TB, n) canonical limbs
+    b = b_ref[...]
+    tb = a.shape[0]
+    width = 2 * n
+    hp = half + 1                       # PPM port width (sum rows carry)
+
+    a0, a1 = a[:, :half], a[:, half:]
+    b0, b1 = b[:, :half], b[:, half:]
+    # (A0+A1), (B0+B1) normalized to half+1 limbs
+    sa = _carry_propagate(
+        a0.astype(jnp.uint32) + a1.astype(jnp.uint32), hp)
+    sb = _carry_propagate(
+        b0.astype(jnp.uint32) + b1.astype(jnp.uint32), hp)
+
+    # the three shared-PPM passes (T2 needs the hp-wide port)
+    t0 = _carry_propagate(_ppm_cols(a0, b0, half, half, 2 * half),
+                          2 * half)
+    t1 = _carry_propagate(_ppm_cols(a1, b1, half, half, 2 * half),
+                          2 * half)
+    t2 = _carry_propagate(_ppm_cols(sa, sb, hp, hp, 2 * hp), 2 * hp)
+
+    # 10:2-compressor placement: +T0, +T1<<2h, +T2<<h, -T0<<h, -T1<<h
+    acc = jnp.zeros((tb, width), jnp.uint32)
+    acc = acc.at[:, :2 * half].add(t0)
+    acc = acc.at[:, 2 * half:].add(t1[:, :width - 2 * half])
+    take2 = min(2 * hp, width - half)
+    acc = acc.at[:, half:half + take2].add(t2[:, :take2])
+    # two's complement of (T0 + T1) << h: NOT every column + 2
+    neg = jnp.full((tb, width), jnp.uint32(2 * MASK), jnp.uint32)
+    take1 = min(2 * half, width - half)
+    neg = neg.at[:, half:half + take1].add(
+        -(t0[:, :take1] + t1[:, :take1]))
+    acc = acc + neg
+    acc = acc.at[:, 0].add(2)           # +1 +1 for the two complements
+
+    out_ref[...] = _carry_propagate(acc, width)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def karatsuba_ppm_mul(a: jax.Array, b: jax.Array, *, tile_b: int = 256,
+                      interpret: bool = True) -> jax.Array:
+    """Batched one-level Karatsuba multiply: (B, N) x (B, N) -> (B, 2N)."""
+    bsz, n = a.shape
+    assert b.shape == (bsz, n)
+    assert n % 2 == 0, "even limb count required (pad first)"
+    half = n // 2
+    tile_b = min(tile_b, bsz)
+    if bsz % tile_b:
+        raise ValueError(f"batch {bsz} % tile {tile_b}")
+    kernel = functools.partial(_kara_kernel, n=n, half=half)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz // tile_b,),
+        in_specs=[pl.BlockSpec((tile_b, n), lambda i: (i, 0)),
+                  pl.BlockSpec((tile_b, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile_b, 2 * n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, 2 * n), jnp.uint32),
+        interpret=interpret,
+    )(a, b)

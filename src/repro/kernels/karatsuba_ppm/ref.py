@@ -1,0 +1,8 @@
+"""Oracle: the core library's one-level Karatsuba multiplier."""
+import jax
+
+from repro.core.karatsuba import karatsuba_mul
+
+
+def karatsuba_ppm_mul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return karatsuba_mul(a, b, levels=1, ct=3)

@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: batched multi-cycle folded big-integer multiply.
+
+TPU adaptation of the paper's Feedback (FB) architecture (Fig. 1).  The
+hardware folds one M x (N/CT) PPM over CT clock cycles; the TPU kernel
+folds one (TILE_B, LA) x (TILE_B, CHUNK) limb-product pass over CT grid
+steps.  The mapping of hardware stages to kernel structure:
+
+  PPM          -> static limb-loop of 16x16->32 lane products (VPU ops,
+                  TILE_B integers per vector op)
+  compressor   -> uint32 column-sum accumulator in VMEM scratch,
+                  carries deferred (carry-save)
+  final adder  -> static carry-propagation loop, run once per grid step
+                  over the (LA + CHUNK + 1)-limb window (the paper's
+                  M + N/CT adder), retiring CHUNK limbs per step
+
+"Area" in hardware corresponds to the *per-step VMEM working set* here:
+it scales with LA + LB/CT instead of LA + LB, so CT folds the footprint
+exactly the way the silicon PPM is folded.  Grid dimension 1 (the cycle
+axis) is sequential on TPU, which is what lets the scratch accumulator
+play the role of the feedback register.
+
+The grid is (batch_tiles, CT): batch tiles stream through the same
+folded datapath, i.e. many independent multiplications share one
+"multiplier instance", the paper's resource-sharing use case.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import limbs as L
+
+MASK = L.MASK
+RADIX_BITS = L.RADIX_BITS
+
+
+def _fb_kernel(a_ref, b_ref, out_ref, acc_ref, *, la, lb, ct, chunk):
+    """One grid step = one MCIM clock cycle for a tile of multiplications."""
+    j = pl.program_id(1)                       # cycle index within CT
+    width = la + chunk + 1                     # M + N/CT (+carry) window
+
+    a = a_ref[...]                             # (TB, LA) canonical limbs
+    b = b_ref[...]                             # (TB, CHUNK) this cycle's chunk
+
+    # ---- feedback shift: acc <- acc >> CHUNK limbs (cycle 0: acc = 0) ----
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(j != 0)
+    def _shift():
+        shifted = jnp.concatenate(
+            [acc_ref[:, chunk:],
+             jnp.zeros((a.shape[0], chunk), jnp.uint32)], axis=1)
+        acc_ref[...] = shifted
+
+    # ---- PPM + compressor: column sums, carries deferred ----------------
+    # Static loop over the chunk's limbs; every iteration is one vector
+    # multiply over the batch tile (the "row" of the hardware PPM array).
+    acc = acc_ref[...]
+    for jj in range(chunk):
+        p = a * b[:, jj:jj + 1]                           # exact 16x16 in u32
+        lo = p & MASK
+        hi = p >> RADIX_BITS
+        acc = acc.at[:, jj:jj + la].add(lo)
+        acc = acc.at[:, jj + 1:jj + la + 1].add(hi)
+
+    # ---- final adder (1CA): carry-propagate the M+N/CT window -----------
+    carry = jnp.zeros((a.shape[0],), jnp.uint32)
+    norm = []
+    for k in range(width):
+        tot = acc[:, k] + carry
+        norm.append(tot & MASK)
+        carry = tot >> RADIX_BITS
+    normalized = jnp.stack(norm, axis=1)
+    acc_ref[...] = normalized
+
+    # ---- retire CHUNK low limbs into the output tile ---------------------
+    out_ref[:, pl.dslice(j * chunk, chunk)] = normalized[:, :chunk]
+
+    # ---- last cycle: the remaining high limbs complete the product -------
+    @pl.when(j == ct - 1)
+    def _tail():
+        tail_limbs = la + lb - ct * chunk            # may be < la+1 (padding)
+        if tail_limbs > 0:
+            out_ref[:, pl.dslice(ct * chunk, tail_limbs)] = \
+                normalized[:, chunk:chunk + tail_limbs]
+
+
+@functools.partial(jax.jit, static_argnames=("ct", "tile_b", "interpret"))
+def mcim_fold_mul(a: jax.Array, b: jax.Array, *, ct: int = 2,
+                  tile_b: int = 256, interpret: bool = True) -> jax.Array:
+    """Batched folded multiply: (B, LA) x (B, LB) -> (B, LA+LB) limbs.
+
+    interpret=True runs the kernel body on CPU for validation; on a real
+    TPU pass interpret=False.
+    """
+    bsz, la = a.shape
+    lb = b.shape[-1]
+    chunk = -(-lb // ct)
+    b = jnp.pad(b, ((0, 0), (0, chunk * ct - lb)))
+    tile_b = min(tile_b, bsz)
+    if bsz % tile_b:
+        raise ValueError(f"batch {bsz} not divisible by tile {tile_b}")
+
+    kernel = functools.partial(_fb_kernel, la=la, lb=lb, ct=ct, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz // tile_b, ct),
+        in_specs=[
+            pl.BlockSpec((tile_b, la), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_b, chunk), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, la + lb), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, la + lb), jnp.uint32),
+        scratch_shapes=[pltpu.VMEM((tile_b, la + chunk + 1), jnp.uint32)],
+        interpret=interpret,
+    )(a, b)

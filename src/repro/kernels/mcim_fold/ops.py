@@ -1,0 +1,47 @@
+"""Jitted public wrappers for the folded big-int multiply kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import limbs as L
+from .kernel import mcim_fold_mul
+from .ref import mcim_fold_mul_ref
+
+# On this (CPU) container the kernel always runs in interpret mode; on a
+# real TPU flip the default with REPRO_PALLAS_INTERPRET=0.
+import os
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
+
+
+@functools.partial(jax.jit, static_argnames=("ct", "use_kernel"))
+def big_mul(a: jax.Array, b: jax.Array, ct: int = 2,
+            use_kernel: bool = True) -> jax.Array:
+    """Batched wide-int multiply with automatic batch-tile selection."""
+    if a.ndim == 1:
+        a, b = a[None], b[None]
+        return big_mul(a, b, ct=ct, use_kernel=use_kernel)[0]
+    bsz = a.shape[0]
+    if not use_kernel:
+        return mcim_fold_mul_ref(a, b, ct=ct)
+    tile = bsz
+    for cand in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if bsz % cand == 0:
+            tile = cand
+            break
+    return mcim_fold_mul(a, b, ct=ct, tile_b=tile, interpret=INTERPRET)
+
+
+def vmem_bytes_per_step(la: int, lb: int, ct: int, tile_b: int) -> int:
+    """Per-grid-step VMEM working set (the kernel's 'area').
+
+    Used by benchmarks to show the 1/CT footprint fold, the TPU analogue
+    of the paper's silicon-area saving.
+    """
+    chunk = -(-lb // ct)
+    words = tile_b * (la              # A tile
+                      + chunk         # B chunk
+                      + (la + chunk + 1))  # accumulator window
+    return words * 4

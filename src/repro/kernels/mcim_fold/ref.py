@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the mcim_fold kernel: the core FB multiplier."""
+import jax
+import jax.numpy as jnp
+
+from repro.core.schoolbook import feedback_mul
+
+
+def mcim_fold_mul_ref(a: jax.Array, b: jax.Array, *, ct: int = 2) -> jax.Array:
+    """(B, LA) x (B, LB) -> (B, LA+LB) limbs, FB architecture."""
+    return feedback_mul(a, b, ct=ct)

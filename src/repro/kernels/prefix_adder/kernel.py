@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: parallel-prefix (Brent-Kung) final adder.
+
+The paper's final-adder stage (1CA) is a carry-propagating addition;
+its RoCoCo-style "fast adder" variants reduce the carry chain's depth.
+The TPU-native analogue of a fast final adder: carry resolution in
+log2(n_limbs) generate/propagate rounds instead of a sequential
+n_limbs-step scan -- each round is one vectorized shift+combine over
+the whole batch tile.
+
+Input: carry-save column sums (uint32, radix 2^16); output: canonical
+16-bit limbs.  Two phases:
+  1. one local split pass reduces every column to (digit, local carry)
+     with digit < 2^16 and carry < 2^16 -- after folding the carries in
+     once, each limb holds < 2^17, so every subsequent carry-in is 0/1;
+  2. Brent-Kung rounds on (generate, propagate) bits resolve all
+     ripple carries in ceil(log2(width)) steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import limbs as L
+
+MASK = L.MASK
+RADIX_BITS = L.RADIX_BITS
+
+
+def _adder_kernel(cols_ref, out_ref, *, width):
+    cols = cols_ref[...]                          # (TB, W) uint32 columns
+    # phase 1: fold high halves once; limbs now < 2^17
+    digit = cols & MASK
+    high = cols >> RADIX_BITS
+    limb = digit.at[:, 1:].add(high[:, :-1])      # may reach 2^17 - 1
+
+    # initial generate/propagate per limb position
+    g = (limb >> RADIX_BITS).astype(jnp.uint32)   # carry-out regardless
+    p = ((limb & MASK) == MASK).astype(jnp.uint32)  # propagates carry-in
+    base = limb & MASK
+
+    # phase 2: Kogge-Stone/Brent-Kung combine: (g,p) o (g',p')
+    shift = 1
+    gk, pk = g, p
+    while shift < width:
+        g_prev = jnp.pad(gk, ((0, 0), (shift, 0)))[:, :width]
+        p_prev = jnp.pad(pk, ((0, 0), (shift, 0)))[:, :width]
+        gk = gk | (pk & g_prev)
+        pk = pk & p_prev
+        shift *= 2
+    # carry INTO position k = combined generate of positions < k
+    carry_in = jnp.pad(gk, ((0, 0), (1, 0)))[:, :width]
+    out_ref[...] = (base + carry_in) & MASK
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def prefix_final_adder(cols: jax.Array, *, tile_b: int = 256,
+                       interpret: bool = True) -> jax.Array:
+    """(B, W) carry-save columns -> (B, W) canonical limbs (mod 2^16W).
+
+    Valid for column sums < 2^32 - 2^16 (all MCIM producers satisfy
+    this; see core.limbs overflow discipline).
+    """
+    bsz, width = cols.shape
+    tile_b = min(tile_b, bsz)
+    if bsz % tile_b:
+        raise ValueError((bsz, tile_b))
+    kernel = functools.partial(_adder_kernel, width=width)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz // tile_b,),
+        in_specs=[pl.BlockSpec((tile_b, width), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile_b, width), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, width), jnp.uint32),
+        interpret=interpret,
+    )(cols)

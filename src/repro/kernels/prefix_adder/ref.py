@@ -1,0 +1,8 @@
+"""Oracle: the core library's sequential 1CA final adder."""
+import jax
+
+from repro.core.limbs import final_adder_1ca
+
+
+def prefix_final_adder_ref(cols: jax.Array) -> jax.Array:
+    return final_adder_1ca(cols)

@@ -1,0 +1,10 @@
+"""Launch layer: production meshes, dry-run, train/serve CLIs.
+
+NOTE: never import .dryrun from here -- it mutates XLA_FLAGS on import
+(by design, for the 512-device placeholder mesh).
+"""
+from .mesh import make_production_mesh, make_host_mesh, data_axes
+from . import sharding, roofline
+
+__all__ = ["make_production_mesh", "make_host_mesh", "data_axes",
+           "sharding", "roofline"]

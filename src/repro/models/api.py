@@ -1,0 +1,165 @@
+"""Unified model API: one object per architecture family.
+
+  model = build_model(cfg)
+  params = model.init(key)
+  loss   = model.train_loss(params, batch, mesh)
+  caches, logits = model.prefill(params, inputs, mesh, s_cap)
+  caches, logits = model.decode_step(params, caches, token, pos, mesh)
+  batch  = model.train_input_specs(shape) / prefill_input_specs(shape)
+
+Families: dense | moe (transformer.py), ssm | hybrid (hybrid.py),
+encoder (encoder.py), vlm (vlm.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import base, transformer as tfm, hybrid, encoder, vlm
+from ..configs.base import ArchConfig, ShapeCfg
+
+
+def _gemma_like(cfg: ArchConfig) -> bool:
+    return cfg.local_per_global is not None or cfg.final_logit_cap is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ---------------- params ----------------
+    def template(self):
+        f = self.cfg.family
+        if f in ("dense", "moe"):
+            return tfm.lm_templates(self.cfg)
+        if f in ("ssm", "hybrid"):
+            return hybrid.hybrid_templates(self.cfg)
+        if f == "encoder":
+            return encoder.encoder_templates(self.cfg)
+        if f == "vlm":
+            return vlm.vlm_templates(self.cfg)
+        raise ValueError(f)
+
+    def init(self, key):
+        return base.init_params(self.template(), key)
+
+    def abstract_params(self):
+        return base.abstract_params(self.template())
+
+    def param_specs(self, mesh):
+        return base.spec_tree(self.template(), mesh)
+
+    def param_count(self) -> int:
+        return base.param_count(self.template())
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: routed experts count top_k/E)."""
+        cfg = self.cfg
+        total = self.param_count()
+        if cfg.family != "moe" or not cfg.n_experts:
+            return total
+        expert_p = 3 * cfg.d_model * cfg.d_ff_expert * cfg.n_experts \
+            * cfg.n_layers
+        active = expert_p * cfg.top_k / cfg.n_experts
+        return int(total - expert_p + active)
+
+    # ---------------- steps ----------------
+    def train_loss(self, params, batch, mesh=None):
+        f = self.cfg.family
+        if f in ("dense", "moe"):
+            return tfm.lm_train_loss(params, batch, self.cfg, mesh,
+                                     embed_scale=_gemma_like(self.cfg))
+        if f in ("ssm", "hybrid"):
+            return hybrid.lm_train_loss(params, batch, self.cfg, mesh)
+        if f == "encoder":
+            return encoder.encoder_train_loss(params, batch, self.cfg, mesh)
+        if f == "vlm":
+            return vlm.vlm_train_loss(params, batch, self.cfg, mesh)
+        raise ValueError(f)
+
+    def prefill(self, params, batch, mesh=None, s_cap=None):
+        f = self.cfg.family
+        if f in ("dense", "moe"):
+            return tfm.lm_prefill(params, batch["tokens"], self.cfg, mesh,
+                                  s_cap, embed_scale=_gemma_like(self.cfg))
+        if f in ("ssm", "hybrid"):
+            return hybrid.lm_prefill(params, batch["tokens"], self.cfg,
+                                     mesh, s_cap)
+        if f == "encoder":
+            return None, encoder.encoder_forward(params, batch["frames"],
+                                                 self.cfg, mesh)
+        if f == "vlm":
+            return vlm.vlm_prefill(params, batch["image_embeds"],
+                                   batch["tokens"], self.cfg, mesh, s_cap)
+        raise ValueError(f)
+
+    def decode_step(self, params, caches, token, pos, mesh=None):
+        f = self.cfg.family
+        if f in ("dense", "moe"):
+            return tfm.lm_decode_step(params, caches, token, pos, self.cfg,
+                                      mesh, embed_scale=_gemma_like(self.cfg))
+        if f in ("ssm", "hybrid"):
+            return hybrid.lm_decode_step(params, caches, token, pos,
+                                         self.cfg, mesh)
+        if f == "vlm":
+            return vlm.vlm_decode_step(params, caches, token, pos,
+                                       self.cfg, mesh)
+        raise ValueError(f"{f} has no decode step")
+
+    def cache_spec(self, batch: int, s_cap: int):
+        f = self.cfg.family
+        if f in ("dense", "moe", "vlm"):
+            return tfm.lm_cache_spec(self.cfg, batch, s_cap)
+        if f in ("ssm", "hybrid"):
+            return hybrid.hybrid_cache_spec(self.cfg, batch, s_cap)
+        raise ValueError(f"{f} has no cache")
+
+    # ---------------- abstract inputs (dry-run) ----------------
+    def train_input_specs(self, shape: ShapeCfg) -> dict:
+        b, s = shape.global_batch, shape.seq_len
+        f = self.cfg.family
+        i32 = jnp.int32
+        if f == "encoder":
+            return {
+                "frames": jax.ShapeDtypeStruct((b, s, encoder.D_FRONTEND),
+                                               jnp.bfloat16),
+                "mask": jax.ShapeDtypeStruct((b, s), jnp.bool_),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        if f == "vlm":
+            nv, dv = self.cfg.n_vis_tokens, self.cfg.d_vis
+            st = s - nv
+            return {
+                "image_embeds": jax.ShapeDtypeStruct((b, nv, dv),
+                                                     jnp.bfloat16),
+                "tokens": jax.ShapeDtypeStruct((b, st), i32),
+                "labels": jax.ShapeDtypeStruct((b, st), i32),
+                "mask": jax.ShapeDtypeStruct((b, st), jnp.float32),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+            "mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+        }
+
+    def prefill_input_specs(self, shape: ShapeCfg) -> dict:
+        b, s = shape.global_batch, shape.seq_len
+        f = self.cfg.family
+        if f == "encoder":
+            return {"frames": jax.ShapeDtypeStruct(
+                (b, s, encoder.D_FRONTEND), jnp.bfloat16)}
+        if f == "vlm":
+            nv, dv = self.cfg.n_vis_tokens, self.cfg.d_vis
+            return {
+                "image_embeds": jax.ShapeDtypeStruct((b, nv, dv),
+                                                     jnp.bfloat16),
+                "tokens": jax.ShapeDtypeStruct((b, s - nv), jnp.int32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

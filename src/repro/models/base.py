@@ -1,0 +1,223 @@
+"""Parameter templates, sharding specs, and common NN primitives.
+
+A model is described by a *template*: a nested dict whose leaves are
+``Param`` descriptors carrying shape, dtype, logical sharding axes, and
+an initializer.  From one template we derive, with guaranteed matching
+tree structure:
+
+  * init_params(template, key)        -> pytree of arrays
+  * abstract_params(template)         -> pytree of ShapeDtypeStruct
+  * spec_tree(template, mesh)         -> pytree of PartitionSpec
+
+Logical axis names are resolved against the physical mesh by
+``resolve_logical``: "batch" -> all data-parallel axes, "model" -> the
+tensor-parallel axis, "fsdp" -> the data axis (parameter sharding), with
+divisibility checks that silently fall back to replication where a dim
+does not divide (e.g. 4 attention heads on a 16-way model axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    shape: tuple
+    logical: tuple               # logical axis name (or None) per dim
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"         # normal | zeros | ones | scaled
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def _tree_map(f, template):
+    return jax.tree_util.tree_map(f, template, is_leaf=is_param)
+
+
+def _initializer(p: Param, key):
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, p.dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, p.dtype)
+    if p.init == "scaled":        # variance-scaled for output projections
+        fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+        std = 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, p.shape, jnp.float32) * std
+                ).astype(p.dtype)
+    return (jax.random.normal(key, p.shape, jnp.float32) * p.scale
+            ).astype(p.dtype)
+
+
+def init_params(template, key):
+    leaves, treedef = jax.tree_util.tree_flatten(template, is_leaf=is_param)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_initializer(p, k) for p, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_params(template):
+    return _tree_map(lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), template)
+
+
+def stack(template, n: int, axis_name: str | None = None):
+    """Prepend a stacking (layer) axis to every Param in the template."""
+    return _tree_map(
+        lambda p: Param((n,) + p.shape, (axis_name,) + p.logical,
+                        p.dtype, p.init, p.scale),
+        template)
+
+
+def param_count(template) -> int:
+    leaves = jax.tree_util.tree_leaves(template, is_leaf=is_param)
+    return sum(math.prod(p.shape) for p in leaves)
+
+
+# ------------------------------------------------------------------ sharding
+
+def mesh_axes(mesh) -> dict:
+    """Map logical axis names -> physical mesh axes for this mesh."""
+    names = mesh.axis_names
+    data_axes = tuple(a for a in ("pod", "data") if a in names)
+    return {
+        "batch": data_axes if len(data_axes) != 1 else data_axes[0],
+        "fsdp": "data" if "data" in names else None,
+        "model": "model" if "model" in names else None,
+        "seq": None,            # overridden to "data" for long-ctx caches
+        "seq_data": data_axes if len(data_axes) != 1 else data_axes[0],
+        None: None,
+    }
+
+
+def _axis_size(mesh, phys) -> int:
+    if phys is None:
+        return 1
+    if isinstance(phys, tuple):
+        return math.prod(mesh.shape[a] for a in phys)
+    return mesh.shape[phys]
+
+
+def resolve_logical(logical: tuple, shape: tuple, mesh) -> P:
+    """Logical axes -> PartitionSpec with divisibility fallback."""
+    table = mesh_axes(mesh)
+    out = []
+    for dim, name in zip(shape, logical):
+        phys = table.get(name)
+        if phys is None or dim % _axis_size(mesh, phys) != 0:
+            out.append(None)
+        else:
+            out.append(phys)
+    return P(*out)
+
+
+def spec_tree(template, mesh):
+    return _tree_map(lambda p: resolve_logical(p.logical, p.shape, mesh),
+                     template)
+
+
+def shard_tree(tree, specs, mesh):
+    """NamedSharding pytree for jit in_shardings / device_put."""
+    from jax.sharding import NamedSharding
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def constrain(x, mesh, *logical):
+    """with_sharding_constraint via logical axis names (no-op off-mesh)."""
+    if mesh is None:
+        return x
+    spec = resolve_logical(tuple(logical), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))
+
+
+# ------------------------------------------------------------------ primitives
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap: float | None):
+    if cap is None:
+        return x
+    xf = x.astype(jnp.float32)
+    return (jnp.tanh(xf / cap) * cap).astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: (..., S, H, D), positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freq  # (...,S,1,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def gelu_mlp(x, w_in, w_out):
+    h = jnp.einsum("...d,df->...f", x, w_in)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, w_out)
+
+
+def cross_entropy_chunked(logits_fn, x, labels, mask, vocab: int,
+                          chunk: int = 512, final_cap: float | None = None,
+                          mesh=None):
+    """Streamed CE: materializes logits only chunk-by-chunk over sequence.
+
+    logits_fn: (B, c, D) -> (B, c, V).  Bounds peak memory to B*c*V*4
+    bytes instead of B*S*V*4 (decisive for 256k-vocab models).  The gold
+    logit is extracted with a one-hot contraction, NOT take_along_axis:
+    a gather along the model-sharded vocab axis would force GSPMD to
+    all-gather the logits; the one-hot product stays sharded and reduces
+    with a cheap psum.
+    """
+    b, s, _ = x.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s  # fallback: single chunk
+    n = s // chunk
+
+    def body(carry, idx):
+        loss_sum, cnt = carry
+        xs = jax.lax.dynamic_slice_in_dim(x, idx * chunk, chunk, axis=1)
+        ls = jax.lax.dynamic_slice_in_dim(labels, idx * chunk, chunk, axis=1)
+        ms = jax.lax.dynamic_slice_in_dim(mask, idx * chunk, chunk, axis=1)
+        logits = logits_fn(xs)
+        if mesh is not None:
+            logits = constrain(logits, mesh, "batch", None, "model")
+        logits = softcap(logits, final_cap).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(ls, vocab, dtype=logits.dtype)
+        gold = jnp.sum(logits * onehot, axis=-1)
+        nll = (lse - gold) * ms
+        return (loss_sum + nll.sum(), cnt + ms.sum()), None
+
+    (loss_sum, cnt), _ = jax.lax.scan(
+        jax.checkpoint(body), (jnp.float32(0.0), jnp.float32(0.0)),
+        jnp.arange(n))
+    return loss_sum / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,69 @@
+"""HuBERT-style encoder-only backbone (masked-prediction objective).
+
+The conv/audio frontend is a STUB per the assignment: input_specs()
+provides precomputed frame embeddings (B, T, d_frontend); a learned
+projection lifts them to d_model.  The backbone is a bidirectional
+transformer (mask_kind="none"); the loss is cross-entropy on masked
+frames against a small codebook vocabulary (504 units).
+
+Encoder-only => no KV cache and no decode step; the decode_* shapes are
+skipped for this arch (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import base
+from .base import Param
+from . import transformer as tfm
+from ..configs.base import ArchConfig
+
+D_FRONTEND = 512          # conv-frontend output width (w2v2/HuBERT standard)
+
+
+def encoder_templates(cfg: ArchConfig) -> dict:
+    layer = {"attn": tfm.attn_template(cfg), "mlp": tfm.mlp_template(cfg)}
+    return {
+        "frame_proj": Param((D_FRONTEND, cfg.d_model), (None, "fsdp")),
+        "mask_embed": Param((cfg.d_model,), (None,)),
+        "layers": base.stack(layer, cfg.n_layers, "layers"),
+        "final_norm": Param((cfg.d_model,), (None,), init="zeros"),
+        "lm_head": Param((cfg.d_model, cfg.padded_vocab), ("fsdp", "model")),
+    }
+
+
+def _encode(params, frames, mask, cfg: ArchConfig, mesh):
+    b, s, _ = frames.shape
+    x = frames.astype(jnp.bfloat16) @ params["frame_proj"]
+    if mask is not None:
+        x = jnp.where(mask[..., None], params["mask_embed"], x)
+    x = base.constrain(x, mesh, "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(carry, p):
+        xc, _ = carry
+        xc, _, _ = tfm.layer_apply(p, xc, cfg, mesh, "global", "train",
+                                   positions=positions,
+                                   mask_override="none")
+        return (xc, jnp.float32(0.0)), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    (x, _), _ = jax.lax.scan(fn, (x, jnp.float32(0.0)), params["layers"])
+    return base.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def encoder_train_loss(params, batch, cfg: ArchConfig, mesh=None):
+    """batch: frames (B,T,512) bf16, mask (B,T) bool, labels (B,T) int32."""
+    frames, mask, labels = batch["frames"], batch["mask"], batch["labels"]
+    x = _encode(params, frames, mask, cfg, mesh)
+    loss_mask = mask.astype(jnp.float32)          # predict only masked frames
+    return base.cross_entropy_chunked(
+        lambda xs: xs @ params["lm_head"], x, labels, loss_mask,
+        cfg.padded_vocab, chunk=cfg.ce_chunk, mesh=mesh)
+
+
+def encoder_forward(params, frames, cfg: ArchConfig, mesh=None):
+    """Serving path: full-sequence unit logits (B, T, V)."""
+    x = _encode(params, frames, None, cfg, mesh)
+    return x @ params["lm_head"]

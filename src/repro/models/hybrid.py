@@ -1,0 +1,158 @@
+"""SSM and hybrid LMs: mamba2 (pure SSD stack) and zamba2 (Mamba2 +
+shared attention blocks).
+
+zamba2's defining trick: ONE physical transformer block (attention+MLP)
+is re-used every ``shared_attn_every`` Mamba layers -- parameter reuse
+over depth, the depth-wise cousin of the paper's temporal folding (one
+PPM re-used over cycles).  Each *application* still needs its own KV
+cache, so caches are stacked over groups while the weights are not.
+
+mamba2 is the shared_attn_every == 0 special case (no attention at all).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import base
+from .base import Param
+from . import transformer as tfm
+from .ssm import ssm_template, ssm_apply, ssm_cache_spec
+from ..configs.base import ArchConfig
+
+
+def _pattern(cfg: ArchConfig):
+    every = cfg.shared_attn_every
+    if every:
+        return every, cfg.n_layers // every, cfg.n_layers % every
+    return 1, cfg.n_layers, 0
+
+
+def hybrid_templates(cfg: ArchConfig) -> dict:
+    every, n_groups, n_tail = _pattern(cfg)
+    group = {"mamba": base.stack(ssm_template(cfg), every)}
+    tpl = {
+        "embed": Param((cfg.padded_vocab, cfg.d_model), ("model", "fsdp")),
+        "final_norm": Param((cfg.d_model,), (None,), init="zeros"),
+        "groups": base.stack(group, n_groups, "layers"),
+    }
+    if n_tail:
+        tpl["tail"] = base.stack(ssm_template(cfg), n_tail, "layers")
+    if cfg.shared_attn_every:
+        tpl["shared_attn"] = tfm.layer_template(cfg)   # ONE copy, reused
+    if not cfg.tie_embeddings:
+        tpl["unembed"] = Param((cfg.d_model, cfg.padded_vocab),
+                               ("fsdp", "model"))
+    return tpl
+
+
+def hybrid_cache_spec(cfg: ArchConfig, batch: int, s_cap: int):
+    every, n_groups, n_tail = _pattern(cfg)
+
+    def stk(spec, n):
+        return jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), spec)
+
+    group = {"mamba": stk(ssm_cache_spec(cfg, batch), every)}
+    if cfg.shared_attn_every:
+        group["shared"] = tfm.attn_cache_spec(cfg, batch, s_cap, "global")
+    tree = {"groups": stk(group, n_groups)}
+    if n_tail:
+        tree["tail"] = stk(ssm_cache_spec(cfg, batch), n_tail)
+    return tree
+
+
+def init_cache(cfg: ArchConfig, batch: int, s_cap: int):
+    return jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                  hybrid_cache_spec(cfg, batch, s_cap))
+
+
+def stack_apply(params, x, cfg: ArchConfig, mesh, mode, caches=None,
+                positions=None, pos=None):
+    every, n_groups, n_tail = _pattern(cfg)
+    use_cache = mode in ("prefill", "decode")
+    shared = params.get("shared_attn")
+
+    def group_body(carry, xs):
+        xc, aux = carry
+        gp, c = xs if use_cache else (xs, None)
+        nc = {}
+        if shared is not None:
+            c_att = c["shared"] if c is not None else None
+            xc, nc_att, _ = tfm.layer_apply(
+                shared, xc, cfg, mesh, "global", mode, cache=c_att,
+                positions=positions, pos=pos)
+            if nc_att is not None:
+                nc["shared"] = nc_att
+        mamba_new = []
+        for i in range(every):
+            c_i = tfm._tree_idx(c["mamba"], i) if c is not None else None
+            xc, nci = ssm_apply(tfm._tree_idx(gp["mamba"], i), xc, cfg,
+                                mesh, mode, cache=c_i)
+            if nci is not None:
+                mamba_new.append(nci)
+        if mamba_new:
+            nc["mamba"] = tfm._tree_stack(mamba_new)
+        return (xc, aux), (nc or None)
+
+    body = group_body
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(group_body)
+    xs = (params["groups"], caches["groups"]) if use_cache \
+        else params["groups"]
+    (x, aux), group_caches = jax.lax.scan(body, (x, jnp.float32(0.0)), xs)
+    new_caches = {"groups": group_caches} if use_cache else None
+
+    if "tail" in params:
+        def tail_body(carry, xs):
+            xc, aux = carry
+            p, c = xs if use_cache else (xs, None)
+            xc, nci = ssm_apply(p, xc, cfg, mesh, mode, cache=c)
+            return (xc, aux), nci
+        tb = jax.checkpoint(tail_body) if (cfg.remat and mode == "train") \
+            else tail_body
+        xs = (params["tail"], caches["tail"]) if use_cache else params["tail"]
+        (x, aux), tail_caches = jax.lax.scan(tb, (x, aux), xs)
+        if use_cache:
+            new_caches["tail"] = tail_caches
+    return x, new_caches, aux
+
+
+# ------------------------------------------------------------------ LM API
+
+def lm_train_loss(params, batch, cfg: ArchConfig, mesh=None):
+    tokens, labels = batch["tokens"], batch["labels"]
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = tfm.embed_tokens(params, tokens, cfg, mesh, False)
+    x, _, _ = stack_apply(params, x, cfg, mesh, "train", positions=positions)
+    x = base.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w = tfm.unembed_matrix(params, cfg)
+    return base.cross_entropy_chunked(
+        lambda xs: xs @ w, x, labels, mask, cfg.padded_vocab,
+        chunk=cfg.ce_chunk, final_cap=cfg.final_logit_cap, mesh=mesh)
+
+
+def lm_prefill(params, tokens, cfg: ArchConfig, mesh=None, s_cap=None):
+    b, s = tokens.shape
+    s_cap = s_cap or cfg.max_seq
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    caches = init_cache(cfg, b, s_cap)
+    x = tfm.embed_tokens(params, tokens, cfg, mesh, False)
+    x, caches, _ = stack_apply(params, x, cfg, mesh, "prefill",
+                               caches=caches, positions=positions)
+    x = base.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = x @ tfm.unembed_matrix(params, cfg)
+    return caches, logits[:, 0]
+
+
+def lm_decode_step(params, caches, token, pos, cfg: ArchConfig, mesh=None):
+    x = tfm.embed_tokens(params, token[:, None], cfg, mesh, False)
+    x, caches, _ = stack_apply(params, x, cfg, mesh, "decode",
+                               caches=caches, pos=pos)
+    x = base.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ tfm.unembed_matrix(params, cfg)
+    return caches, logits[:, 0]

@@ -1,0 +1,159 @@
+"""Mixture-of-Experts blocks (dbrx 16e top-4, llama4-scout 16e top-1).
+
+Two dispatch paths:
+
+  * training / prefill: **expert-choice** routing (Zhou et al. 2022) --
+    each expert selects its top-C tokens (C = T * top_k / E), giving
+    static shapes, perfect load balance, and no token-dropping
+    pathologies on TPU.  (Deviation from the released models' token-
+    choice routing, recorded in DESIGN.md §Arch-applicability.)
+  * decode: dense token-choice top-k combine -- with one token per
+    sequence the expert weights dominate the cost anyway, and the dense
+    path preserves the released models' routing semantics exactly.
+
+Expert weights are sharded expert-major on the model axis (EP); the
+token gather/scatter across the data axis is the collective hot spot
+analysed in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import base
+from .base import Param, constrain
+from ..configs.base import ArchConfig
+
+
+def moe_template(cfg: ArchConfig) -> dict:
+    d, e, fe = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    t = {
+        "norm": Param((d,), (None,), init="zeros"),
+        "router": Param((d, e), ("fsdp", None), dtype=jnp.float32),
+        "w_gate": Param((e, d, fe), ("model", "fsdp", None)),
+        "w_up": Param((e, d, fe), ("model", "fsdp", None)),
+        "w_down": Param((e, fe, d), ("model", None, "fsdp"), init="scaled"),
+    }
+    if cfg.n_shared_experts:
+        f = cfg.d_ff * cfg.n_shared_experts
+        t["shared"] = {
+            "w_gate": Param((d, f), ("fsdp", "model")),
+            "w_up": Param((d, f), ("fsdp", "model")),
+            "w_down": Param((f, d), ("model", "fsdp"), init="scaled"),
+        }
+    return t
+
+
+def _expert_ffn(xg, p):
+    """xg: (E, C, D) tokens grouped per expert -> (E, C, D)."""
+    g = jnp.einsum("ecd,edf->ecf", xg, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xg, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xg.dtype) * u
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+
+def moe_apply(p, x, cfg: ArchConfig, mesh, decode: bool = False):
+    """Returns (x + moe(x), router_z_loss)."""
+    b, s, d = x.shape
+    xn = base.rms_norm(x, p["norm"], cfg.norm_eps)
+    logits = xn.astype(jnp.float32) @ p["router"]          # (B, S, E)
+    zloss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    if decode or b * s <= 4 * cfg.n_experts:
+        y = _dense_token_choice(p, xn, logits, cfg)
+    elif cfg.moe_local_dispatch and mesh is not None:
+        y = _expert_choice_local(p, xn, logits, cfg, mesh)
+    else:
+        y = _expert_choice(p, xn, logits, cfg, mesh)
+
+    if cfg.n_shared_experts:
+        y = y + base.swiglu(xn, p["shared"]["w_gate"], p["shared"]["w_up"],
+                            p["shared"]["w_down"])
+    return constrain(x + y.astype(x.dtype), mesh,
+                     "batch", None, None), zloss
+
+
+def _dense_token_choice(p, xn, logits, cfg: ArchConfig):
+    """All-experts compute + sparse top-k combine (decode path)."""
+    topv, topi = jax.lax.top_k(logits, cfg.top_k)          # (B, S, K)
+    if cfg.top_k == 1:
+        gates = jax.nn.sigmoid(topv)                       # llama4-style
+    else:
+        gates = jax.nn.softmax(topv, axis=-1)              # dbrx-style
+    # combine weights (B, S, E)
+    onehot = jax.nn.one_hot(topi, cfg.n_experts, dtype=jnp.float32)
+    w = jnp.einsum("bske,bsk->bse", onehot, gates)
+    g = jnp.einsum("bsd,edf->bsef", xn, p["w_gate"])
+    u = jnp.einsum("bsd,edf->bsef", xn, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xn.dtype) * u
+    y = jnp.einsum("bsef,efd->bsed", h, p["w_down"])
+    return jnp.einsum("bsed,bse->bsd", y, w.astype(y.dtype))
+
+
+def _expert_choice(p, xn, logits, cfg: ArchConfig, mesh):
+    """Expert-choice dispatch: top-C tokens per expert, C = T*top_k/E."""
+    b, s, d = xn.shape
+    t = b * s
+    e = cfg.n_experts
+    c = max(1, (t * cfg.top_k) // e)
+    xf = xn.reshape(t, d)
+    affin = jax.nn.softmax(logits.reshape(t, e), axis=-1)  # (T, E)
+    gate, idx = jax.lax.top_k(affin.T, c)                  # (E, C)
+    xg = jnp.take(xf, idx, axis=0)                         # (E, C, D) gather
+    xg = constrain(xg, mesh, "model", "fsdp", None)
+    y = _expert_ffn(xg, p)
+    y = constrain(y, mesh, "model", "fsdp", None)
+    y = y * gate[..., None].astype(y.dtype)
+    out = jnp.zeros((t, d), y.dtype).at[idx.reshape(-1)].add(
+        y.reshape(e * c, d))
+    return out.reshape(b, s, d)
+
+
+def _expert_choice_local(p, xn, logits, cfg: ArchConfig, mesh):
+    """Shard-local expert choice (§Perf iteration for collective-bound
+    MoE training).
+
+    The global-EC gather/scatter address the full token range, which
+    GSPMD can only partition by all-gathering the (T, D) activations --
+    the dominant collective in the dbrx/llama4 baselines.  Here routing
+    is decided *within each data shard*: tokens reshape to
+    (n_data_shards, T/shards) aligned with the batch sharding, each
+    shard's experts pick top-C/shards of its own tokens, and the
+    gather/scatter become batched ops that are parallel over the
+    sharded group axis (no data movement).  Cross-device traffic reduces
+    to resharding the picked (G, E, C_l, D) block from group-major to
+    expert-major -- an all-to-all instead of repeated all-gathers.
+    """
+    from .transformer import _axis_size
+    b, s, d = xn.shape
+    t = b * s
+    e = cfg.n_experts
+    g = 1
+    for ax in ("pod", "data"):
+        g *= _axis_size(mesh, ax)
+    if g <= 1 or t % g or b % g:
+        return _expert_choice(p, xn, logits, cfg, mesh)
+    tl = t // g
+    cl = max(1, (tl * cfg.top_k) // e)
+    xg = xn.reshape(g, tl, d)
+    xg = constrain(xg, mesh, "batch", None, None)
+    affin = jax.nn.softmax(logits.reshape(g, tl, e), axis=-1)
+    gate, idx = jax.lax.top_k(jnp.swapaxes(affin, 1, 2), cl)   # (G, E, Cl)
+    picked = jnp.take_along_axis(xg[:, None], idx[..., None], axis=2)
+    picked = constrain(picked, mesh, "batch", "model", None, None)
+    gq = jnp.einsum("gecd,edf->gecf", picked, p["w_gate"])
+    up = jnp.einsum("gecd,edf->gecf", picked, p["w_up"])
+    h = jax.nn.silu(gq.astype(jnp.float32)).astype(picked.dtype) * up
+    y = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    y = constrain(y, mesh, "batch", "model", None, None)
+    y = y * gate[..., None].astype(y.dtype)
+    out = jnp.zeros((g, tl, d), y.dtype)
+    gidx = jnp.arange(g)[:, None, None]
+    out = out.at[gidx, idx].add(y)
+    # D-sharded combine: the EP-combine reduction becomes a
+    # reduce-scatter (each model rank keeps D/n) + a bf16 all-gather,
+    # instead of a full f32 all-reduce of (T, D) -- ~25% less link
+    # traffic (JAX promotes bf16 scatter-add to f32, doubling the AR).
+    out = constrain(out, mesh, "batch", None, "model")
+    out = constrain(out.astype(xn.dtype), mesh, "batch", None, None)
+    return out.reshape(b, s, d)

@@ -1,0 +1,191 @@
+"""Mamba2 blocks via the SSD (state-space duality) chunked algorithm.
+
+Implements Dao & Gu 2024 (arXiv:2405.21060): within chunks of length Q
+the recurrence is computed as a masked quadratic form (MXU-friendly);
+across chunks a short ``lax.scan`` carries the (H, N, P) state.  All
+decay/cumsum math runs in f32; every exponent is <= 0, so exp() is
+stable by construction.
+
+Decode is the O(1) recurrent step on a carried (state, conv window)
+cache -- this is what makes the ``long_500k`` shape tractable for the
+ssm/hybrid archs where full attention is skipped.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import base
+from .base import Param, constrain
+from ..configs.base import ArchConfig
+
+
+def ssm_template(cfg: ArchConfig) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    conv_ch = di + 2 * n
+    proj_out = 2 * di + 2 * n + h          # z, x, B, C, dt
+    return {
+        "norm": Param((d,), (None,), init="zeros"),
+        "in_proj": Param((d, proj_out), ("fsdp", "model")),
+        "conv_w": Param((cfg.ssm_conv_width, conv_ch), (None, "model"),
+                        scale=0.1),
+        "conv_b": Param((conv_ch,), ("model",), init="zeros"),
+        "dt_bias": Param((h,), (None,), dtype=jnp.float32, init="zeros"),
+        "A_log": Param((h,), (None,), dtype=jnp.float32, init="zeros"),
+        "D": Param((h,), (None,), dtype=jnp.float32, init="ones"),
+        "gate_norm": Param((di,), (None,), init="zeros"),
+        "out_proj": Param((di, d), ("model", "fsdp"), init="scaled"),
+    }
+
+
+def ssm_cache_spec(cfg: ArchConfig, batch: int):
+    di, n, h, pdim = (cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads,
+                      cfg.ssm_head_dim)
+    conv_ch = di + 2 * n
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv_width - 1, conv_ch),
+                                     jnp.bfloat16),
+        "state": jax.ShapeDtypeStruct((batch, h, n, pdim), jnp.float32),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ArchConfig):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:2 * di + 2 * n]
+    dt_raw = zxbcdt[..., -h:]
+    return z, xbc, dt_raw
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv via shifted adds. xbc: (B, S, CH)."""
+    kw = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (kw - 1, 0), (0, 0)))
+    s = xbc.shape[1]
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for k in range(kw):
+        out = out + pad[:, k:k + s].astype(jnp.float32) \
+            * w[k].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    return jax.nn.silu(out).astype(xbc.dtype)
+
+
+def _gated_out(p, y, z, u, cfg, mesh):
+    y = base.rms_norm(
+        y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+        p["gate_norm"], cfg.norm_eps)
+    return constrain(u + y @ p["out_proj"], mesh, "batch", None, None)
+
+
+def ssm_apply(p, u, cfg: ArchConfig, mesh, mode: str, cache=None):
+    """Returns (y, new_cache).  u: (B, S, D)."""
+    if mode == "decode":
+        return _ssm_decode(p, u, cfg, mesh, cache)
+
+    b, s_orig, d = u.shape
+    di, n, h, pdim = (cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads,
+                      cfg.ssm_head_dim)
+    q = cfg.ssm_chunk
+
+    xn = base.rms_norm(u, p["norm"], cfg.norm_eps)
+    z, xbc_pre, dt_raw = _split_proj(xn @ p["in_proj"], cfg)
+    xbc = _causal_conv(xbc_pre, p["conv_w"], p["conv_b"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+
+    # pad to a chunk multiple; padded steps get dt=0 => identity decay
+    # and zero state contribution (exactness preserved for any length).
+    s = -(-s_orig // q) * q
+    if s != s_orig:
+        pad = s - s_orig
+        xbc = jnp.pad(xbc, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = s // q
+
+    xh = xbc[..., :di].reshape(b, s, h, pdim)
+    xh = constrain(xh, mesh, "batch", None, "model", None)
+    bm = xbc[..., di:di + n]                               # (B, S, N), G=1
+    cm = xbc[..., di + n:]
+    a = -jnp.exp(p["A_log"])                               # (H,) < 0
+
+    # chunked views
+    xc = xh.reshape(b, nc, q, h, pdim)
+    bc = bm.reshape(b, nc, q, n).astype(jnp.float32)
+    cc = cm.reshape(b, nc, q, n).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, q, h)
+
+    da = dtc * a                                           # (B,nc,q,H) <= 0
+    cum = jnp.cumsum(da, axis=2)
+
+    # ---- intra-chunk (quadratic, MXU) ----
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)             # (B,nc,q,q)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,nc,i,j,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    lmat = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    w = cb[..., None] * lmat * dtc[:, :, None, :, :]       # (B,nc,i,j,H)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", w.astype(xc.dtype), xc,
+                        preferred_element_type=jnp.float32)
+
+    # ---- chunk states + inter-chunk recurrence ----
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)           # (B,nc,q,H)
+    states = jnp.einsum("bcln,bclh,bclhp->bchnp",
+                        bc, (decay_out * dtc).astype(jnp.float32),
+                        xc.astype(jnp.float32))            # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # (B,nc,H)
+
+    def inter(carry, xs):
+        s_c, dec = xs
+        prev = carry
+        new = prev * dec[..., None, None] + s_c
+        return new, prev
+
+    states_t = jnp.moveaxis(states, 1, 0)                  # (nc,B,H,N,P)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)
+    s0 = jnp.zeros((b, h, n, pdim), jnp.float32)
+    s_final, prev_t = jax.lax.scan(inter, s0, (states_t, decay_t))
+    states_prev = jnp.moveaxis(prev_t, 0, 1)               # (B,nc,H,N,P)
+
+    y_off = jnp.einsum("bcin,bchnp,bcih->bcihp",
+                       cc, states_prev, jnp.exp(cum))
+    y = (y_diag + y_off).astype(jnp.float32) \
+        + p["D"][None, None, None, :, None] * xc.astype(jnp.float32)
+    y = y.reshape(b, s, di)[:, :s_orig].astype(u.dtype)
+    out = _gated_out(p, y, z, u, cfg, mesh)
+
+    new_cache = None
+    if mode == "prefill":
+        kw = cfg.ssm_conv_width
+        new_cache = {"conv": xbc_pre[:, s_orig - (kw - 1):s_orig, :],
+                     "state": s_final}
+    return out, new_cache
+
+
+def _ssm_decode(p, u, cfg: ArchConfig, mesh, cache):
+    """One-token recurrent step. u: (B, 1, D)."""
+    b = u.shape[0]
+    di, n, h, pdim = (cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads,
+                      cfg.ssm_head_dim)
+    xn = base.rms_norm(u, p["norm"], cfg.norm_eps)
+    z, xbc_pre, dt_raw = _split_proj(xn @ p["in_proj"], cfg)
+
+    window = jnp.concatenate([cache["conv"].astype(xbc_pre.dtype), xbc_pre],
+                             axis=1)                       # (B, kw, CH)
+    wconv = p["conv_w"].astype(jnp.float32)
+    xbc = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), wconv) \
+        + p["conv_b"].astype(jnp.float32)
+    xbc = jax.nn.silu(xbc).astype(u.dtype)                 # (B, CH)
+    new_conv = window[:, 1:].astype(jnp.bfloat16)
+
+    xh = xbc[:, :di].reshape(b, h, pdim).astype(jnp.float32)
+    bm = xbc[:, di:di + n].astype(jnp.float32)
+    cm = xbc[:, di + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * a)                                   # (B, H)
+
+    state = cache["state"] * da[..., None, None] \
+        + jnp.einsum("bn,bh,bhp->bhnp", bm, dt, xh)
+    y = jnp.einsum("bn,bhnp->bhp", cm, state) \
+        + p["D"][None, :, None] * xh
+    y = y.reshape(b, 1, di).astype(u.dtype)
+    out = _gated_out(p, y, z, u, cfg, mesh)
+    return out, {"conv": new_conv, "state": state}

@@ -1,0 +1,478 @@
+"""Decoder-only transformer family: dense, gemma-style local/global, MoE.
+
+Layer-stack structure: layers are grouped into repeating *pattern groups*
+(e.g. gemma3's 5 local + 1 global); the stack is a ``lax.scan`` over
+groups, so HLO size stays O(one group) regardless of depth -- essential
+for compiling 64-layer models against a 512-device mesh.  Heterogeneous
+members inside a group are unrolled (at most 6).
+
+Modes:
+  train    -- full-sequence forward, chunked CE loss
+  prefill  -- full-sequence forward, returns KV caches + last logits
+  decode   -- one token per call against the caches (ring buffers for
+              sliding-window layers)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import base
+from .base import Param, constrain
+from .attention import (flash_attention, decode_attention,
+                        decode_attention_int8,
+                        flash_attention_context_parallel)
+from ..configs.base import ArchConfig
+
+
+# ------------------------------------------------------------------ helpers
+
+def _axis_size(mesh, name):
+    if mesh is None or name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]
+
+
+def constrain_act(x, mesh):
+    return constrain(x, mesh, "batch", *([None] * (x.ndim - 1)))
+
+
+def constrain_heads(x, mesh, fallback: str = "hd"):
+    """(B, S, H, hd): shard heads on model if divisible; else fall back
+    to head_dim ("hd") or replication ("replicate").
+
+    The fallback matters: hd-sharding makes every QK^T contraction a
+    psum (collective storm for kv=1 archs like gemma3/paligemma);
+    replication trades that for one activation all-gather per layer
+    (§Perf iteration)."""
+    if mesh is None:
+        return x
+    m = _axis_size(mesh, "model")
+    if x.shape[-2] % m == 0:
+        return constrain(x, mesh, "batch", None, "model", None)
+    if fallback == "hd" and x.shape[-1] % m == 0:
+        return constrain(x, mesh, "batch", None, None, "model")
+    return constrain_act(x, mesh)
+
+
+def constrain_kv(x, mesh, fallback: str = "hd"):
+    """(B, S, KV, hd): kv heads on model when divisible.  When they are
+    not (GQA kv < model size), "hd" leaves the layout to XLA (it
+    inherits wk's column sharding => per-score-block psum -- the
+    gemma3/paligemma baseline), while "replicate" forces replication so
+    the whole attention loop is collective-free (§Perf iteration)."""
+    if mesh is None:
+        return x
+    m = _axis_size(mesh, "model")
+    if x.shape[-2] % m == 0:
+        return constrain(x, mesh, "batch", None, "model", None)
+    if fallback in ("replicate", "seq"):
+        return constrain_act(x, mesh)
+    return x
+
+
+def group_pattern(cfg: ArchConfig):
+    """(k_local, has_global, n_groups, n_tail_local) for the layer stack."""
+    if cfg.local_per_global is None:
+        return 0, True, cfg.n_layers, 0
+    size = cfg.local_per_global + 1
+    return (cfg.local_per_global, True, cfg.n_layers // size,
+            cfg.n_layers % size)
+
+
+def layer_theta(cfg: ArchConfig, kind: str) -> float:
+    if kind == "global" and cfg.rope_theta_global is not None:
+        return cfg.rope_theta_global
+    return cfg.rope_theta
+
+
+# ------------------------------------------------------------------ templates
+
+def attn_template(cfg: ArchConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    t = {
+        "norm": Param((d,), (None,), init="zeros"),
+        "wq": Param((d, h * hd), ("fsdp", "model")),
+        "wk": Param((d, kv * hd), ("fsdp", "model")),
+        "wv": Param((d, kv * hd), ("fsdp", "model")),
+        "wo": Param((h * hd, d), ("model", "fsdp"), init="scaled"),
+    }
+    if cfg.qk_norm:
+        t["q_norm"] = Param((hd,), (None,), init="zeros")
+        t["k_norm"] = Param((hd,), (None,), init="zeros")
+    return t
+
+
+def mlp_template(cfg: ArchConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "norm": Param((d,), (None,), init="zeros"),
+        "w_gate": Param((d, f), ("fsdp", "model")),
+        "w_up": Param((d, f), ("fsdp", "model")),
+        "w_down": Param((f, d), ("model", "fsdp"), init="scaled"),
+    }
+
+
+def layer_template(cfg: ArchConfig) -> dict:
+    from . import moe as moe_mod
+    t = {"attn": attn_template(cfg)}
+    if cfg.family == "moe":
+        t["moe"] = moe_mod.moe_template(cfg)
+    else:
+        t["mlp"] = mlp_template(cfg)
+    return t
+
+
+def lm_templates(cfg: ArchConfig) -> dict:
+    k_local, has_global, n_groups, n_tail = group_pattern(cfg)
+    group = {}
+    if k_local:
+        group["local"] = base.stack(layer_template(cfg), k_local)
+    if has_global:
+        group["global"] = layer_template(cfg)
+    tpl = {
+        "embed": Param((cfg.padded_vocab, cfg.d_model), ("model", "fsdp")),
+        "final_norm": Param((cfg.d_model,), (None,), init="zeros"),
+        "groups": base.stack(group, n_groups, "layers"),
+    }
+    if n_tail:
+        tpl["tail"] = base.stack(layer_template(cfg), n_tail, "layers")
+    if not cfg.tie_embeddings:
+        tpl["unembed"] = Param((cfg.d_model, cfg.padded_vocab),
+                               ("fsdp", "model"))
+    return tpl
+
+
+# ------------------------------------------------------------------ caches
+
+def attn_cache_spec(cfg: ArchConfig, batch: int, s_cap: int, kind: str):
+    cap = min(cfg.window, s_cap) if kind == "local" else s_cap
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    shp = (batch, cap, kv, hd)
+    if cfg.kv_cache_dtype == "int8":
+        # MCIM int8 KV cache (§Perf): halves the dominant decode HBM
+        # traffic; per-(pos, head) f32 scales.
+        return {"k": jax.ShapeDtypeStruct(shp, jnp.int8),
+                "v": jax.ShapeDtypeStruct(shp, jnp.int8),
+                "k_scale": jax.ShapeDtypeStruct(shp[:3], jnp.float32),
+                "v_scale": jax.ShapeDtypeStruct(shp[:3], jnp.float32)}
+    return {"k": jax.ShapeDtypeStruct(shp, jnp.bfloat16),
+            "v": jax.ShapeDtypeStruct(shp, jnp.bfloat16)}
+
+
+def _quant_kv(x):
+    """Symmetric int8 over head_dim. x: (..., hd) -> (int8, f32 scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.where(amax == 0, 1.0, amax / 127.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant_kv(q, scale):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(jnp.bfloat16)
+
+
+def lm_cache_spec(cfg: ArchConfig, batch: int, s_cap: int):
+    """ShapeDtypeStruct tree mirroring the layer-group structure."""
+    k_local, has_global, n_groups, n_tail = group_pattern(cfg)
+
+    def stack_spec(spec, n):
+        return jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), spec)
+
+    group = {}
+    if k_local:
+        group["local"] = stack_spec(attn_cache_spec(cfg, batch, s_cap,
+                                                    "local"), k_local)
+    if has_global:
+        group["global"] = attn_cache_spec(cfg, batch, s_cap, "global")
+    tree = {"groups": stack_spec(group, n_groups)}
+    if n_tail:
+        tree["tail"] = stack_spec(attn_cache_spec(cfg, batch, s_cap,
+                                                  "local"), n_tail)
+    return tree
+
+
+def init_cache(cfg: ArchConfig, batch: int, s_cap: int):
+    return jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                  lm_cache_spec(cfg, batch, s_cap))
+
+
+# ------------------------------------------------------------------ layers
+
+def attn_apply(p, x, cfg: ArchConfig, mesh, kind: str, mode: str,
+               positions=None, pos=None, cache=None, prefix_len=None,
+               mask_override=None):
+    """Returns (y, new_cache).  Keys are roped before caching."""
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    theta = layer_theta(cfg, kind)
+    xn = base.rms_norm(x, p["norm"], cfg.norm_eps)
+    q = xn @ p["wq"]
+    k = xn @ p["wk"]
+    v = xn @ p["wv"]
+    q = constrain_heads(q.reshape(b, s, h, hd), mesh, cfg.attn_fallback)
+    k = constrain_kv(k.reshape(b, s, kv, hd), mesh, cfg.attn_fallback)
+    v = constrain_kv(v.reshape(b, s, kv, hd), mesh, cfg.attn_fallback)
+    if cfg.qk_norm:
+        q = base.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = base.rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    if mode == "decode":
+        q = base.rope(q, pos[:, None].astype(jnp.float32), theta)
+        k = base.rope(k, pos[:, None].astype(jnp.float32), theta)
+        cap = cache["k"].shape[1]
+        slot = pos % cap if kind == "local" else pos
+        bidx = jnp.arange(b)
+        if kind == "local":
+            valid = jnp.arange(cap)[None, :] < jnp.minimum(pos + 1, cap)[:, None]
+        else:
+            valid = jnp.arange(cap)[None, :] <= pos[:, None]
+        if cfg.kv_cache_dtype == "int8":
+            qk, sk = _quant_kv(k[:, 0])
+            qv, sv = _quant_kv(v[:, 0])
+            new_cache = {
+                "k": cache["k"].at[bidx, slot].set(qk),
+                "v": cache["v"].at[bidx, slot].set(qv),
+                "k_scale": cache["k_scale"].at[bidx, slot].set(sk),
+                "v_scale": cache["v_scale"].at[bidx, slot].set(sv),
+            }
+            # integer-domain attention: int8 reads end to end, scales
+            # deferred to the end (PPM -> compressor -> final adder).
+            o = decode_attention_int8(
+                q, new_cache["k"], new_cache["k_scale"],
+                new_cache["v"], new_cache["v_scale"], valid,
+                logit_cap=cfg.attn_logit_cap)
+        else:
+            new_cache = {"k": cache["k"].at[bidx, slot].set(k[:, 0]),
+                         "v": cache["v"].at[bidx, slot].set(v[:, 0])}
+            o = decode_attention(q, new_cache["k"], new_cache["v"], valid,
+                                 logit_cap=cfg.attn_logit_cap)
+    else:
+        q = base.rope(q, positions.astype(jnp.float32), theta)
+        k = base.rope(k, positions.astype(jnp.float32), theta)
+        # re-pin after rope: the (hd-sharded) prefill cache layout would
+        # otherwise back-propagate into the roped k and turn every QK
+        # score block into a psum over the model axis.
+        q = constrain_heads(q, mesh, cfg.attn_fallback)
+        k = constrain_kv(k, mesh, cfg.attn_fallback)
+        mask_kind = ("local" if kind == "local"
+                     else ("prefix" if prefix_len is not None else "causal"))
+        if mask_override is not None:
+            mask_kind = mask_override
+        use_cp = (cfg.attn_fallback == "seq" and mesh is not None
+                  and "model" in mesh.axis_names
+                  and s % max(_axis_size(mesh, "model"), 1) == 0
+                  and h % _axis_size(mesh, "model") != 0)
+        if use_cp:
+            o = flash_attention_context_parallel(
+                q, k, v, mesh, mask_kind=mask_kind, window=cfg.window,
+                prefix_len=prefix_len, logit_cap=cfg.attn_logit_cap,
+                q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk)
+        else:
+            o = flash_attention(
+                q, k, v, mask_kind=mask_kind, window=cfg.window,
+                prefix_len=prefix_len, logit_cap=cfg.attn_logit_cap,
+                q_chunk=cfg.q_chunk, k_chunk=cfg.k_chunk,
+                schedule=cfg.attn_schedule)
+        new_cache = None
+        if mode == "prefill":
+            cap = cache["k"].shape[1]
+            if cfg.kv_cache_dtype == "int8":
+                k_store, ks = _quant_kv(k)
+                v_store, vs = _quant_kv(v)
+            else:
+                k_store, v_store, ks, vs = k, v, None, None
+
+            def write(buf, val, slots=None):
+                if slots is not None:
+                    return buf.at[:, slots].set(val)
+                return jax.lax.dynamic_update_slice_in_dim(buf, val, 0,
+                                                           axis=1)
+
+            slots = None
+            if kind == "local" and s >= cap:
+                slots = jnp.arange(s - cap, s) % cap
+                k_store = k_store[:, s - cap:]
+                v_store = v_store[:, s - cap:]
+                if ks is not None:
+                    ks, vs = ks[:, s - cap:], vs[:, s - cap:]
+            new_cache = {"k": write(cache["k"], k_store, slots),
+                         "v": write(cache["v"], v_store, slots)}
+            if ks is not None:
+                new_cache["k_scale"] = write(cache["k_scale"], ks, slots)
+                new_cache["v_scale"] = write(cache["v_scale"], vs, slots)
+
+    o = o.reshape(b, s, h * hd)
+    if cfg.attn_fallback in ("replicate", "seq") and mesh is not None \
+            and h % _axis_size(mesh, "model") != 0:
+        # pin the attention output too: otherwise GSPMD back-propagates
+        # wo's row sharding INTO the flash loop and re-shards the QK/PV
+        # contractions (one psum per chunk pair -- the baseline storm).
+        o = constrain_act(o, mesh)
+    y = o @ p["wo"]
+    return constrain_act(x + y, mesh), new_cache
+
+
+def mlp_apply(p, x, cfg: ArchConfig, mesh):
+    xn = base.rms_norm(x, p["norm"], cfg.norm_eps)
+    y = base.swiglu(xn, p["w_gate"], p["w_up"], p["w_down"])
+    return constrain_act(x + y, mesh)
+
+
+def layer_apply(p, x, cfg: ArchConfig, mesh, kind, mode, **kw):
+    from . import moe as moe_mod
+    aux = jnp.float32(0.0)
+    x, new_cache = attn_apply(p["attn"], x, cfg, mesh, kind, mode, **kw)
+    if cfg.family == "moe":
+        x, aux = moe_mod.moe_apply(p["moe"], x, cfg, mesh,
+                                   decode=(mode == "decode"))
+    else:
+        x = mlp_apply(p["mlp"], x, cfg, mesh)
+    return x, new_cache, aux
+
+
+# ------------------------------------------------------------------ stack
+
+def _tree_idx(tree, i):
+    return jax.tree_util.tree_map(lambda a: a[i], tree)
+
+
+def _tree_stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _group_apply(gp, x, cfg, mesh, mode, cache=None, **kw):
+    """One pattern group: k_local local layers + optional global layer."""
+    k_local = 0
+    if "local" in gp:
+        k_local = jax.tree_util.tree_leaves(gp["local"])[0].shape[0]
+    new_cache = {}
+    aux_total = jnp.float32(0.0)
+    locals_new = []
+    for i in range(k_local):
+        c_i = _tree_idx(cache["local"], i) if cache is not None else None
+        x, nc, aux = layer_apply(_tree_idx(gp["local"], i), x, cfg, mesh,
+                                 "local", mode, cache=c_i, **kw)
+        aux_total += aux
+        if nc is not None:
+            locals_new.append(nc)
+    if locals_new:
+        new_cache["local"] = _tree_stack(locals_new)
+    if "global" in gp:
+        c_g = cache["global"] if cache is not None else None
+        x, nc, aux = layer_apply(gp["global"], x, cfg, mesh, "global", mode,
+                                 cache=c_g, **kw)
+        aux_total += aux
+        if nc is not None:
+            new_cache["global"] = nc
+    return x, (new_cache or None), aux_total
+
+
+def stack_apply(params, x, cfg: ArchConfig, mesh, mode, caches=None, **kw):
+    """Scan the grouped layer stack. Returns (x, new_caches, aux_loss)."""
+    use_cache = mode in ("prefill", "decode")
+
+    def group_body(carry, xs):
+        xc, aux = carry
+        gp, c = xs if use_cache else (xs, None)
+        xc, nc, a = _group_apply(gp, xc, cfg, mesh, mode, cache=c, **kw)
+        return (xc, aux + a), nc
+
+    body = group_body
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(group_body)
+
+    xs = (params["groups"], caches["groups"]) if use_cache \
+        else params["groups"]
+    (x, aux), group_caches = jax.lax.scan(body, (x, jnp.float32(0.0)), xs)
+
+    new_caches = {"groups": group_caches} if use_cache else None
+    if "tail" in params:
+        def tail_body(carry, xs):
+            xc, aux = carry
+            p, c = xs if use_cache else (xs, None)
+            xc, nc, a = layer_apply(p, xc, cfg, mesh, "local", mode,
+                                    cache=c, **kw)
+            return (xc, aux + a), nc
+        tb = tail_body
+        if cfg.remat and mode == "train":
+            tb = jax.checkpoint(tail_body)
+        xs = (params["tail"], caches["tail"]) if use_cache else params["tail"]
+        (x, aux), tail_caches = jax.lax.scan(tb, (x, aux), xs)
+        if use_cache:
+            new_caches["tail"] = tail_caches
+    return x, new_caches, aux
+
+
+# ------------------------------------------------------------------ LM API
+
+def embed_tokens(params, tokens, cfg: ArchConfig, mesh, scale: bool):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if scale:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+    return constrain_act(x, mesh)
+
+
+def unembed_matrix(params, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+_EMBED_SCALE_FAMILIES = ("gemma",)
+
+
+def lm_train_loss(params, batch, cfg: ArchConfig, mesh=None,
+                  embed_scale: bool = False, prefix_len=None):
+    tokens, labels = batch["tokens"], batch["labels"]
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = embed_tokens(params, tokens, cfg, mesh, embed_scale)
+    x, _, aux = stack_apply(params, x, cfg, mesh, "train",
+                            positions=positions, prefix_len=prefix_len)
+    x = base.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w = unembed_matrix(params, cfg)
+    ce = base.cross_entropy_chunked(
+        lambda xs: xs @ w, x, labels, mask, cfg.padded_vocab,
+        chunk=cfg.ce_chunk, final_cap=cfg.final_logit_cap, mesh=mesh)
+    if cfg.family == "moe":
+        ce = ce + cfg.router_aux_coef * aux / cfg.n_layers
+    return ce
+
+
+def lm_prefill(params, tokens, cfg: ArchConfig, mesh=None, s_cap=None,
+               embed_scale: bool = False, prefix_len=None):
+    """Returns (caches, last_token_logits)."""
+    b, s = tokens.shape
+    s_cap = s_cap or cfg.max_seq
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    caches = init_cache(cfg, b, s_cap)
+    x = embed_tokens(params, tokens, cfg, mesh, embed_scale)
+    x, caches, _ = stack_apply(params, x, cfg, mesh, "prefill",
+                               caches=caches, positions=positions,
+                               prefix_len=prefix_len)
+    x = base.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = base.softcap(x @ unembed_matrix(params, cfg),
+                          cfg.final_logit_cap)
+    return caches, logits[:, 0]
+
+
+def lm_decode_step(params, caches, token, pos, cfg: ArchConfig, mesh=None,
+                   embed_scale: bool = False):
+    """token: (B,) int32, pos: (B,) int32. Returns (caches, logits (B,V))."""
+    x = embed_tokens(params, token[:, None], cfg, mesh, embed_scale)
+    x, caches, _ = stack_apply(params, x, cfg, mesh, "decode",
+                               caches=caches, pos=pos)
+    x = base.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = base.softcap(x @ unembed_matrix(params, cfg),
+                          cfg.final_logit_cap)
+    return caches, logits[:, 0]

@@ -1,0 +1,80 @@
+"""PaliGemma-style VLM: SigLIP vision stub + gemma-family decoder.
+
+The vision tower is a STUB per the assignment: input_specs() provides
+precomputed patch embeddings (B, n_vis_tokens, d_vis); a learned linear
+projector lifts them into the LM embedding space.  The sequence is
+[image tokens | text tokens] with a PaliGemma prefix-LM mask (image
+prefix attends bidirectionally; text is causal); loss is CE on text
+positions only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import base
+from .base import Param
+from . import transformer as tfm
+from ..configs.base import ArchConfig
+
+
+def vlm_templates(cfg: ArchConfig) -> dict:
+    tpl = tfm.lm_templates(cfg)
+    tpl["vis_proj"] = Param((cfg.d_vis, cfg.d_model), (None, "fsdp"))
+    return tpl
+
+
+def _embed_multimodal(params, image_embeds, tokens, cfg, mesh):
+    vis = image_embeds.astype(jnp.bfloat16) @ params["vis_proj"]
+    txt = tfm.embed_tokens(params, tokens, cfg, mesh, scale=True)
+    x = jnp.concatenate([vis.astype(txt.dtype), txt], axis=1)
+    return base.constrain(x, mesh, "batch", None, None)
+
+
+def vlm_train_loss(params, batch, cfg: ArchConfig, mesh=None):
+    """batch: image_embeds (B,V,dv), tokens (B,St), labels (B,St), mask."""
+    img, tokens, labels = (batch["image_embeds"], batch["tokens"],
+                           batch["labels"])
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    b, st = tokens.shape
+    nv = cfg.n_vis_tokens
+    x = _embed_multimodal(params, img, tokens, cfg, mesh)
+    s = nv + st
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x, _, _ = tfm.stack_apply(params, x, cfg, mesh, "train",
+                              positions=positions, prefix_len=nv)
+    x = base.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    # full-length labels: image positions never scored
+    full_labels = jnp.concatenate(
+        [jnp.zeros((b, nv), labels.dtype), labels], axis=1)
+    full_mask = jnp.concatenate(
+        [jnp.zeros((b, nv), jnp.float32), mask.astype(jnp.float32)], axis=1)
+    w = tfm.unembed_matrix(params, cfg)
+    return base.cross_entropy_chunked(
+        lambda xs: xs @ w, x, full_labels, full_mask, cfg.padded_vocab,
+        chunk=cfg.ce_chunk, final_cap=cfg.final_logit_cap, mesh=mesh)
+
+
+def vlm_prefill(params, image_embeds, tokens, cfg: ArchConfig, mesh=None,
+                s_cap=None):
+    b, st = tokens.shape
+    nv = cfg.n_vis_tokens
+    s = nv + st
+    s_cap = s_cap or cfg.max_seq
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    caches = tfm.init_cache(cfg, b, s_cap)
+    x = _embed_multimodal(params, image_embeds, tokens, cfg, mesh)
+    x, caches, _ = tfm.stack_apply(params, x, cfg, mesh, "prefill",
+                                   caches=caches, positions=positions,
+                                   prefix_len=nv)
+    x = base.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = base.softcap(x @ tfm.unembed_matrix(params, cfg),
+                          cfg.final_logit_cap)
+    return caches, logits[:, 0]
+
+
+def vlm_decode_step(params, caches, token, pos, cfg: ArchConfig, mesh=None):
+    return tfm.lm_decode_step(params, caches, token, pos, cfg, mesh,
+                              embed_scale=True)

@@ -1,0 +1,6 @@
+from .adamw import (AdamWConfig, init_state, apply_updates, schedule_lr,
+                    global_norm)
+from . import compress
+
+__all__ = ["AdamWConfig", "init_state", "apply_updates", "schedule_lr",
+           "global_norm", "compress"]

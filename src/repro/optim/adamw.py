@@ -1,0 +1,108 @@
+"""AdamW with decoupled weight decay, global-norm clipping, schedules.
+
+Self-contained (no optax).  Moments are f32 regardless of param dtype;
+parameters update in their own dtype (bf16 params + f32 moments is the
+production configuration -- see DESIGN.md §Numerics).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    schedule: str = "cosine"        # cosine | constant | linear
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule_lr(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    elif cfg.schedule == "linear":
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        decay = 1.0 - (1.0 - cfg.min_lr_ratio) * frac
+    else:                            # cosine
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) \
+            * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * decay
+
+
+def _decay_mask(path: tuple) -> bool:
+    """No weight decay for norms / biases / scalar SSM params."""
+    name = "/".join(str(getattr(k, "key", k)) for k in path)
+    nodecay = ("norm", "bias", "A_log", "D", "dt_bias", "mask_embed")
+    return not any(t in name for t in nodecay)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def init_state(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+    }
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig):
+    """Returns (new_params, new_state, stats)."""
+    step = state["step"] + 1
+    lr = schedule_lr(cfg, step)
+
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+        grads = jax.tree_util.tree_map(
+            lambda g: (g.astype(jnp.float32) * scale), grads)
+    else:
+        grads = jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32), grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    paths = [p for p, _ in jax.tree_util.tree_flatten_with_path(params)[0]]
+    flat_p = jax.tree_util.tree_leaves(params)
+    flat_m = jax.tree_util.tree_leaves(state["m"])
+    flat_v = jax.tree_util.tree_leaves(state["v"])
+
+    new_p, new_m, new_v = [], [], []
+    for path, p, g, m, v in zip(paths, flat_p, flat_g, flat_m, flat_v):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if cfg.weight_decay and _decay_mask(path):
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * update).astype(p.dtype))
+        new_m.append(m)
+        new_v.append(v)
+
+    unflatten = jax.tree_util.tree_unflatten
+    new_state = {"step": step, "m": unflatten(treedef, new_m),
+                 "v": unflatten(treedef, new_v)}
+    return (unflatten(treedef, new_p), new_state,
+            {"grad_norm": gnorm, "lr": lr})

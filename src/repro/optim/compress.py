@@ -1,0 +1,89 @@
+"""Int8 gradient compression with error feedback (distributed-optimization
+trick for cross-pod all-reduce traffic).
+
+Gradients are quantized to int8 with per-tensor-row scales *before* the
+data-parallel reduction; the quantization residual is carried in an
+error-feedback buffer so the compression bias vanishes over steps
+(Karimireddy et al. 2019).  Collective bytes drop 4x (f32) / 2x (bf16),
+directly shrinking the roofline collective term for DP-dominated steps.
+
+The quantize/dequantize pair reuses the MCIM int8 machinery
+(kernels.int8_matmul.quantize_rows).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.int8_matmul import quantize_rows
+
+
+def init_error(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _q(x):
+    flat = x.reshape(-1, x.shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
+    q, s = quantize_rows(flat, axis=1)
+    return q.reshape(x.shape), s
+
+
+def _dq(q, s, shape):
+    last = shape[-1] if len(shape) > 1 else int(jnp.size(q))
+    flat = q.reshape(-1, last).astype(jnp.float32)
+    return (flat * s.reshape(-1, 1)).reshape(shape)
+
+
+def compress_grads(grads, error):
+    """Returns (int8 tree, scales tree, new_error tree)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = _q(corrected)
+        back = _dq(q, s, corrected.shape)
+        return q, s, corrected - back
+    flat = jax.tree_util.tree_map(one, grads, error)
+    qs = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                is_leaf=lambda x: isinstance(x, tuple))
+    ss = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                is_leaf=lambda x: isinstance(x, tuple))
+    es = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                is_leaf=lambda x: isinstance(x, tuple))
+    return qs, ss, es
+
+
+def decompress_grads(qs, ss, shapes):
+    return jax.tree_util.tree_map(
+        lambda q, s, g: _dq(q, s, g.shape), qs, ss, shapes)
+
+
+def compressed_psum(grads, error, axis_name: str):
+    """int8 all-reduce with error feedback, for use inside shard_map.
+
+    All replicas first agree on a SHARED per-row scale (pmax of local
+    amax -- int8 values from different replicas are only summable if
+    they share a scale), then the int8 grads are summed exactly in
+    int32 (the MCIM carry-free compressor idea applied to the
+    collective) and dequantized once.
+    """
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        flat = corrected.reshape(-1, corrected.shape[-1]) \
+            if corrected.ndim > 1 else corrected.reshape(1, -1)
+        amax = jnp.max(jnp.abs(flat), axis=1)
+        amax = jax.lax.pmax(amax, axis_name)          # shared scale
+        s = jnp.where(amax == 0, 1.0, amax / 127.0)
+        q = jnp.clip(jnp.round(flat / s[:, None]), -127, 127
+                     ).astype(jnp.int8)
+        back = _dq(q, s, corrected.shape)
+        new_e = corrected - back
+        q_sum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        approx = _dq(q_sum, s, corrected.shape) / n
+        return approx, new_e
+    pairs = jax.tree_util.tree_map(one, grads, error)
+    out = jax.tree_util.tree_map(lambda t: t[0], pairs,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+    new_e = jax.tree_util.tree_map(lambda t: t[1], pairs,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return out, new_e

@@ -1,0 +1,62 @@
+"""Philox-4x32-10 counter-based RNG built on the MCIM 32x32->64 multiply.
+
+TPUs have no native 64-bit integer multiply; the Philox round function
+needs mulhi/mullo of 32-bit lanes, which we synthesize from the paper's
+folded 16-bit-limb machinery (core.mul32x32_64).  Counter-based RNG is
+what makes the data pipeline *order-independent and resumable*: sample i
+of epoch e is a pure function of (seed, e, i), so restarts and elastic
+re-sharding never replay or skip data.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..core import mul32x32_64
+
+PHILOX_M0 = jnp.uint32(0xD2511F53)
+PHILOX_M1 = jnp.uint32(0xCD9E8D57)
+W32_0 = jnp.uint32(0x9E3779B9)
+W32_1 = jnp.uint32(0xBB67AE85)
+
+
+@functools.partial(jax.jit, static_argnames=("rounds",))
+def philox4x32(counter: jax.Array, key: jax.Array, rounds: int = 10):
+    """counter: (..., 4) uint32, key: (..., 2) uint32 -> (..., 4) uint32."""
+    c0, c1, c2, c3 = [counter[..., i] for i in range(4)]
+    k0, k1 = key[..., 0], key[..., 1]
+    for _ in range(rounds):
+        lo0, hi0 = mul32x32_64(PHILOX_M0, c0)
+        lo1, hi1 = mul32x32_64(PHILOX_M1, c2)
+        c0, c1, c2, c3 = (hi1 ^ c1 ^ k0, lo1, hi0 ^ c3 ^ k1, lo0)
+        k0 = k0 + W32_0
+        k1 = k1 + W32_1
+    return jnp.stack([c0, c1, c2, c3], axis=-1)
+
+
+def random_u32(seed: int, stream: int, offsets: jax.Array) -> jax.Array:
+    """Deterministic uint32 per offset: (N,) int -> (N, 4) uint32 lanes."""
+    offsets = offsets.astype(jnp.uint32)
+    counter = jnp.stack(
+        [offsets, jnp.zeros_like(offsets),
+         jnp.full_like(offsets, stream & 0xFFFFFFFF),
+         jnp.zeros_like(offsets)], axis=-1)
+    key = jnp.broadcast_to(
+        jnp.asarray([seed & 0xFFFFFFFF, (seed >> 32) & 0xFFFFFFFF],
+                    jnp.uint32), offsets.shape + (2,))
+    return philox4x32(counter, key)
+
+
+def random_uniform(seed: int, stream: int, offsets: jax.Array) -> jax.Array:
+    """(N,) offsets -> (N,) float32 in [0, 1)."""
+    bits = random_u32(seed, stream, offsets)[..., 0]
+    return bits.astype(jnp.float32) * (1.0 / 4294967296.0)
+
+
+def random_tokens(seed: int, stream: int, offsets: jax.Array,
+                  vocab: int) -> jax.Array:
+    """Deterministic synthetic token ids (for the synthetic pipeline)."""
+    bits = random_u32(seed, stream, offsets)[..., 0]
+    return (bits % jnp.uint32(vocab)).astype(jnp.int32)

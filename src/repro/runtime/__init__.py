@@ -1,0 +1,3 @@
+from .trainer import TrainerConfig, train, make_train_step, TrainResult
+
+__all__ = ["TrainerConfig", "train", "make_train_step", "TrainResult"]

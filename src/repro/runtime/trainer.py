@@ -1,0 +1,197 @@
+"""Fault-tolerant distributed training loop.
+
+Production behaviors, all exercised by tests on 1 CPU device and
+designed for 1000+ nodes:
+
+  * jit-compiled train step with donated params/optimizer state and
+    explicit in/out shardings from the model's logical spec tree;
+  * microbatch gradient accumulation (optionally *exact* via the MCIM
+    128-bit fixed-point path -- bit-identical for any microbatch order);
+  * non-finite-gradient guard: skip the update, count the event
+    (protects against transient HW faults / loss spikes);
+  * periodic async checkpointing + resume-from-latest (preemption
+    recovery); SIGTERM handler requests a final checkpoint;
+  * straggler watchdog: per-step wall-time EWMA, steps slower than
+    ``straggler_factor``x the EWMA are logged with their step index
+    (on real fleets this feeds the scheduler's replacement policy);
+  * multi-process bootstrap hook (jax.distributed.initialize) when the
+    standard cluster env vars are present.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+import time
+from typing import Any, Callable, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..models import base as mbase
+from ..models.api import Model
+from ..optim import AdamWConfig, init_state, apply_updates
+from ..exact import exact_tree_sum
+from ..checkpoint import CheckpointManager
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    microbatches: int = 1
+    exact_accum: bool = False        # MCIM fixed-point accumulation
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_checkpoints: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    skip_nonfinite: bool = True
+
+
+def maybe_init_distributed() -> None:
+    """Multi-process bootstrap (no-op single-process)."""
+    if "JAX_COORDINATOR_ADDRESS" in os.environ and \
+            jax.process_count() == 1:
+        jax.distributed.initialize(
+            coordinator_address=os.environ["JAX_COORDINATOR_ADDRESS"],
+            num_processes=int(os.environ.get("JAX_NUM_PROCESSES", "1")),
+            process_id=int(os.environ.get("JAX_PROCESS_ID", "0")))
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig, mesh=None,
+                    microbatches: int = 1, exact_accum: bool = False):
+    """Build the jitted (params, opt_state, batch) -> ... step."""
+
+    def loss_fn(params, batch):
+        return model.train_loss(params, batch, mesh)
+
+    def step_fn(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def micro(i):
+                mb = jax.tree_util.tree_map(
+                    lambda x: x.reshape((microbatches,
+                                         x.shape[0] // microbatches)
+                                        + x.shape[1:])[i], batch)
+                return jax.value_and_grad(loss_fn)(params, mb)
+            pairs = [micro(i) for i in range(microbatches)]
+            losses = [p[0] for p in pairs]
+            gs = [p[1] for p in pairs]
+            if exact_accum:
+                grads = exact_tree_sum(gs)
+                grads = jax.tree_util.tree_map(
+                    lambda g: g / microbatches, grads)
+            else:
+                grads = jax.tree_util.tree_map(
+                    lambda *x: sum(x) / microbatches, *gs)
+            loss = sum(losses) / microbatches
+
+        gnorm_sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                       for g in jax.tree_util.tree_leaves(grads))
+        finite = jnp.isfinite(gnorm_sq) & jnp.isfinite(loss)
+
+        new_params, new_opt, stats = apply_updates(params, grads,
+                                                   opt_state, opt_cfg)
+        # non-finite guard: keep old state, bump step anyway
+        keep = lambda new, old: jax.tree_util.tree_map(
+            lambda n, o: jnp.where(finite, n, o), new, old)
+        new_params = keep(new_params, params)
+        new_opt = keep(
+            {k: v for k, v in new_opt.items() if k != "step"},
+            {k: v for k, v in opt_state.items() if k != "step"})
+        new_opt["step"] = opt_state["step"] + 1
+        stats = dict(stats, loss=loss, finite=finite)
+        return new_params, new_opt, stats
+
+    if mesh is None:
+        return jax.jit(step_fn, donate_argnums=(0, 1))
+
+    pspecs = model.param_specs(mesh)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    ns = lambda spec: NamedSharding(mesh, spec)
+    param_sh = jax.tree_util.tree_map(ns, pspecs)
+    opt_sh = {"step": ns(P()),
+              "m": param_sh, "v": param_sh}
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    batch_sh = ns(P(data_axes))
+    return jax.jit(
+        step_fn,
+        in_shardings=(param_sh, opt_sh, batch_sh),
+        out_shardings=(param_sh, opt_sh, None),
+        donate_argnums=(0, 1))
+
+
+@dataclasses.dataclass
+class TrainResult:
+    losses: list
+    skipped_steps: int
+    straggler_steps: list
+    final_step: int
+
+
+def train(model: Model, source, opt_cfg: AdamWConfig,
+          tcfg: TrainerConfig, mesh=None, params=None,
+          resume: bool = True, seed: int = 0) -> TrainResult:
+    maybe_init_distributed()
+    ckpt = CheckpointManager(tcfg.checkpoint_dir, keep=tcfg.keep_checkpoints)
+
+    if params is None:
+        params = model.init(jax.random.PRNGKey(seed))
+    opt_state = init_state(params)
+    start_step = 0
+
+    if resume and ckpt.latest_step() is not None:
+        s = ckpt.latest_step()
+        tree = ckpt.restore(s, {"params": params, "opt": opt_state})
+        params, opt_state = tree["params"], tree["opt"]
+        start_step = s
+        print(f"[trainer] resumed from step {s}")
+
+    step_fn = make_train_step(model, opt_cfg, mesh, tcfg.microbatches,
+                              tcfg.exact_accum)
+
+    stop = {"now": False}
+
+    def _sigterm(signum, frame):   # preemption notice
+        stop["now"] = True
+    old_handler = signal.signal(signal.SIGTERM, _sigterm)
+
+    losses, stragglers = [], []
+    skipped = 0
+    ewma = None
+    step = start_step
+    try:
+        for step in range(start_step, tcfg.steps):
+            t0 = time.perf_counter()
+            batch = source.batch_at(step)
+            from ..data.pipeline import device_batch
+            batch = device_batch(batch, mesh)
+            params, opt_state, stats = step_fn(params, opt_state, batch)
+            loss = float(stats["loss"])
+            if not bool(stats["finite"]):
+                skipped += 1
+            losses.append(loss)
+            dt = time.perf_counter() - t0
+            ewma = dt if ewma is None else 0.9 * ewma + 0.1 * dt
+            if dt > tcfg.straggler_factor * ewma and step > start_step + 2:
+                stragglers.append(step)
+                print(f"[trainer] straggler step {step}: "
+                      f"{dt:.2f}s vs EWMA {ewma:.2f}s")
+            if tcfg.log_every and step % tcfg.log_every == 0:
+                print(f"[trainer] step {step} loss {loss:.4f} "
+                      f"gnorm {float(stats['grad_norm']):.3f} {dt:.2f}s")
+            if tcfg.checkpoint_every and \
+                    (step + 1) % tcfg.checkpoint_every == 0:
+                ckpt.save_async(step + 1,
+                                {"params": params, "opt": opt_state})
+            if stop["now"]:
+                print(f"[trainer] SIGTERM at step {step}; checkpointing")
+                break
+        ckpt.wait()
+        ckpt.save(step + 1, {"params": params, "opt": opt_state})
+    finally:
+        signal.signal(signal.SIGTERM, old_handler)
+    return TrainResult(losses=losses, skipped_steps=skipped,
+                       straggler_steps=stragglers, final_step=step + 1)

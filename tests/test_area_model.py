@@ -1,0 +1,112 @@
+"""Area/timing model regression vs the paper's published numbers.
+
+Calibration uses exactly ONE area (Star 16x16 = 1348 um^2) and two Star
+stress anchors; everything asserted here is a model *prediction*.
+Tolerances reflect the documented model error (DESIGN.md §Area-model).
+"""
+import pytest
+
+from repro.core import area_model as am
+from repro.core import timing_model as tm
+from repro.core.mcim import MCIMConfig
+from repro.core import planner
+
+
+def sav(bits, cfg):
+    return am.savings_vs_star(bits, bits, cfg)
+
+
+# ---------------------------------------------------- absolute area checks
+
+@pytest.mark.parametrize("bits,paper,tol", [
+    (16, 1348, 0.01),     # calibration point (exact by construction)
+    (32, 4349, 0.10),
+    (128, 66319, 0.10),
+])
+def test_star_areas(bits, paper, tol):
+    got = am.area_um2(bits, bits, MCIMConfig(arch="star", ct=1))
+    assert abs(got - paper) / paper <= tol, (got, paper)
+
+
+# --------------------------------------------------- Table VII (CT sweep)
+
+@pytest.mark.parametrize("ct,paper_savings", [
+    (2, 0.40), (3, 0.50), (4, 0.57), (5, 0.60),
+    (6, 0.64), (7, 0.68), (8, 0.72)])
+def test_table7_ct_sweep_within_7pp(ct, paper_savings):
+    got = sav(32, MCIMConfig(arch="fb", ct=ct))
+    assert abs(got - paper_savings) <= 0.07, (ct, got, paper_savings)
+
+
+def test_ct_sweep_monotone():
+    vals = [sav(32, MCIMConfig(arch="fb", ct=ct)) for ct in range(2, 9)]
+    assert all(b > a for a, b in zip(vals, vals[1:]))
+
+
+# ------------------------------------------------ Tables II/III (relaxed)
+
+@pytest.mark.parametrize("bits,arch,ct,levels,adder,paper,tol", [
+    (16, "fb", 2, 1, "1ca", 1 - 942 / 1348, 0.05),
+    (16, "fb", 3, 1, "1ca", 1 - 748 / 1348, 0.05),
+    (128, "ff", 2, 1, "1ca", 1 - 37042 / 66319, 0.05),
+    (128, "fb", 2, 1, "1ca", 1 - 42913 / 66319, 0.13),
+    (128, "fb", 3, 1, "1ca", 1 - 30217 / 66319, 0.10),
+    (128, "karatsuba", 3, 1, "3ca", 1 - 27929 / 66319, 0.11),
+    (128, "karatsuba", 3, 2, "3ca", 1 - 27463 / 66319, 0.10),
+])
+def test_relaxed_savings(bits, arch, ct, levels, adder, paper, tol):
+    got = sav(bits, MCIMConfig(arch=arch, ct=ct, levels=levels, adder=adder))
+    assert abs(got - paper) <= tol, (got, paper)
+
+
+# -------------------------------------------------- strict timing (IV/VI)
+
+def test_fb_misses_strict_16b_target():
+    """Table IV: the feedback loop cannot meet 0.31 ns."""
+    assert not tm.meets_timing("fb", 16, 0.31)
+    assert tm.meets_timing("ff", 16, 0.31)      # pipelineable
+    assert tm.meets_timing("star", 16, 0.31)
+
+
+def test_table6_strict_savings():
+    t = 0.8
+    star = am.area_um2(128, 128, MCIMConfig(arch="star", ct=1)) \
+        * tm.stress("star", 128, t)
+    karat = am.area_um2(128, 128, MCIMConfig(arch="karatsuba", ct=3)) \
+        * tm.stress("karatsuba", 128, t)
+    got = 1 - karat / star
+    assert abs(got - 0.63) <= 0.05, got          # paper: 63%
+
+
+def test_max_freq_model_matches_table5():
+    assert abs(tm.t_comb("fb", 128) - 0.80) <= 0.08
+    assert abs(tm.t_comb("karatsuba", 128) - 0.54) <= 0.08
+
+
+# ----------------------------------------------------------- planner
+
+def test_planner_agrees_with_paper_table8():
+    rows = [(8, False, "fb"), (16, True, "ff"), (16, False, "fb"),
+            (32, True, "ff"), (32, False, "fb")]
+    for bits, strict, expect in rows:
+        pick = planner.best_single(bits, bits, 2, strict_timing=strict)
+        assert pick.arch == expect, (bits, strict, pick)
+    pick = planner.best_single(128, 128, 3, strict_timing=False)
+    assert pick.arch in ("karatsuba", "fb")
+
+
+def test_planner_fractional_tp_beats_star_bank():
+    """Sec V-E use case: TP=3.5 via 3xStar + 1 CT-2 MCIM saves area."""
+    plan = planner.plan_throughput(32, 32, 3.5)
+    conv = planner.star_bank_area(32, 32, 3.5)
+    assert plan.area < conv
+    assert float(plan.throughput) == 3.5
+
+
+def test_karatsuba_beats_schoolbook_only_at_large_widths():
+    """Paper Sec. V-A: Karatsuba wins only for >=128 bits."""
+    small = sav(32, MCIMConfig(arch="karatsuba", ct=3)) \
+        < sav(32, MCIMConfig(arch="fb", ct=3))
+    large = sav(256, MCIMConfig(arch="karatsuba", ct=3, levels=2)) \
+        > sav(256, MCIMConfig(arch="fb", ct=3)) - 0.10
+    assert small and large

@@ -1,0 +1,131 @@
+"""Attention equivalences: chunked flash vs naive, banded vs masked,
+decode vs flash, int8 decode accuracy, hypothesis sweeps."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (flash_attention, decode_attention,
+                                    decode_attention_int8, _band_pairs)
+
+RNG = np.random.default_rng(9)
+
+
+def _qkv(b=2, sq=256, sk=256, h=4, kv=2, d=32, dtype=jnp.float32):
+    q = jnp.asarray(RNG.standard_normal((b, sq, h, d)), dtype)
+    k = jnp.asarray(RNG.standard_normal((b, sk, kv, d)), dtype)
+    v = jnp.asarray(RNG.standard_normal((b, sk, kv, d)), dtype)
+    return q, k, v
+
+
+def _naive(q, k, v, mask_kind, window=None, prefix_len=None, cap=None):
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    s = s / np.sqrt(d)
+    if cap is not None:
+        s = jnp.tanh(s / cap) * cap
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    if mask_kind == "causal":
+        m = kpos <= qpos
+    elif mask_kind == "local":
+        m = (kpos <= qpos) & (kpos > qpos - window)
+    elif mask_kind == "prefix":
+        m = (kpos <= qpos) | (kpos < prefix_len)
+    else:
+        m = jnp.ones_like(kpos <= qpos)
+    s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, d)
+
+
+@pytest.mark.parametrize("mask_kind,window,prefix", [
+    ("causal", None, None), ("local", 64, None),
+    ("prefix", None, 48), ("none", None, None)])
+@pytest.mark.parametrize("qc,kc", [(64, 64), (128, 32), (256, 256)])
+def test_flash_matches_naive(mask_kind, window, prefix, qc, kc):
+    q, k, v = _qkv()
+    got = flash_attention(q, k, v, mask_kind=mask_kind, window=window,
+                          prefix_len=prefix, q_chunk=qc, k_chunk=kc)
+    want = _naive(q, k, v, mask_kind, window, prefix)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("mask_kind,window,prefix", [
+    ("causal", None, None), ("local", 64, None), ("prefix", None, 48)])
+def test_banded_matches_masked(mask_kind, window, prefix):
+    q, k, v = _qkv()
+    a = flash_attention(q, k, v, mask_kind=mask_kind, window=window,
+                        prefix_len=prefix, q_chunk=64, k_chunk=64,
+                        schedule="masked")
+    b = flash_attention(q, k, v, mask_kind=mask_kind, window=window,
+                        prefix_len=prefix, q_chunk=64, k_chunk=64,
+                        schedule="banded")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_banded_skips_half_the_work():
+    """The compute-term claim: causal band ~ half the chunk pairs."""
+    full = len(_band_pairs(8, 8, "none", None, 64, None))
+    causal = len(_band_pairs(8, 8, "causal", None, 64, None))
+    local = len(_band_pairs(8, 8, "local", 64, 64, None))
+    assert causal == 36 and full == 64      # n(n+1)/2
+    assert local <= 2 * 8                   # diagonal band
+
+
+def test_softcap_applied():
+    q, k, v = _qkv(sq=64, sk=64)
+    got = flash_attention(q, k, v, mask_kind="causal", logit_cap=5.0,
+                          q_chunk=32, k_chunk=32)
+    want = _naive(q, k, v, "causal", cap=5.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_decode_matches_flash_last_row():
+    """decode over a cache == last row of full flash attention."""
+    q, k, v = _qkv(sq=128, sk=128)
+    full = flash_attention(q, k, v, mask_kind="causal", q_chunk=32,
+                           k_chunk=32)
+    valid = jnp.ones((2, 128), bool)
+    dec = decode_attention(q[:, -1:], k, v, valid)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]),
+                               np.asarray(full[:, -1]), rtol=2e-3, atol=2e-3)
+
+
+def test_int8_decode_close_to_fp():
+    q, k, v = _qkv(sq=1, sk=256, dtype=jnp.bfloat16)
+    valid = jnp.ones((2, 256), bool)
+    ref = decode_attention(q, k, v, valid)
+    amax_k = jnp.max(jnp.abs(k.astype(jnp.float32)), -1)
+    amax_v = jnp.max(jnp.abs(v.astype(jnp.float32)), -1)
+    ks = jnp.where(amax_k == 0, 1, amax_k / 127)
+    vs = jnp.where(amax_v == 0, 1, amax_v / 127)
+    k8 = jnp.round(k.astype(jnp.float32) / ks[..., None]).astype(jnp.int8)
+    v8 = jnp.round(v.astype(jnp.float32) / vs[..., None]).astype(jnp.int8)
+    got = decode_attention_int8(q, k8, ks, v8, vs, valid)
+    err = np.abs(np.asarray(got - ref, np.float32))
+    assert err.max() < 0.08, err.max()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([32, 48, 96]),
+       st.sampled_from([1, 2, 4]))
+def test_property_flash_shapes(b, s, kv):
+    """Shape sweep incl. non-chunk-divisible sequence lengths."""
+    h, d = 4, 16
+    q = jnp.asarray(RNG.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, s, kv, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, s, kv, d)), jnp.float32)
+    got = flash_attention(q, k, v, mask_kind="causal", q_chunk=32,
+                          k_chunk=32)
+    want = _naive(q, k, v, "causal")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)

@@ -1,0 +1,189 @@
+"""Correctness of the core MCIM multipliers vs Python's bigint oracle.
+
+This is the analogue of the paper's VCS simulation with random inputs
+(Sec. IV): every architecture x CT x width is checked bit-exactly.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import limbs as L
+from repro.core import (MCIMConfig, mcim_mul, star_mul, feedback_mul,
+                        feedforward_mul, karatsuba_mul, mul32x32_64)
+
+RNG = np.random.default_rng(0)
+
+
+def _rand_pair(bits_a, bits_b, batch=8):
+    a = L.random_limbs(RNG, (batch,), bits_a)
+    b = L.random_limbs(RNG, (batch,), bits_b)
+    return a, b
+
+
+def _check(fn, a, b, modulo_limbs=None):
+    out = np.asarray(fn(jnp.asarray(a), jnp.asarray(b)))
+    for ai, bi, oi in zip(a, b, out):
+        expect = L.from_limbs(ai) * L.from_limbs(bi)
+        if modulo_limbs:
+            expect %= 1 << (16 * modulo_limbs)
+        assert L.from_limbs(oi) == expect, (
+            f"{L.from_limbs(ai)} * {L.from_limbs(bi)}: "
+            f"got {L.from_limbs(oi)}, want {expect}")
+
+
+# ---------------------------------------------------------------- star
+
+@pytest.mark.parametrize("bits", [8, 16, 32, 64, 128, 256])
+def test_star_exact(bits):
+    a, b = _rand_pair(bits, bits)
+    _check(star_mul, a, b)
+
+
+def test_star_rectangular():
+    a, b = _rand_pair(128, 64)
+    _check(star_mul, a, b)
+
+
+def test_star_3ca_adder():
+    a, b = _rand_pair(48, 48)
+    _check(lambda x, y: star_mul(x, y, adder="3ca"), a, b)
+
+
+# ------------------------------------------------------------- feedback
+
+@pytest.mark.parametrize("bits", [16, 32, 64, 128])
+@pytest.mark.parametrize("ct", [2, 3, 4, 5, 8])
+def test_feedback_exact(bits, ct):
+    a, b = _rand_pair(bits, bits)
+    _check(lambda x, y: feedback_mul(x, y, ct=ct), a, b)
+
+
+def test_feedback_rectangular_128x64():
+    """Paper Table IX case."""
+    a, b = _rand_pair(128, 64)
+    _check(lambda x, y: feedback_mul(x, y, ct=2), a, b)
+
+
+def test_feedback_chunk_padding():
+    # LB not divisible by CT exercises the padding path: 80 bits / CT 3.
+    a, b = _rand_pair(80, 80)
+    _check(lambda x, y: feedback_mul(x, y, ct=3), a, b)
+
+
+# ----------------------------------------------------------- feedforward
+
+@pytest.mark.parametrize("bits", [16, 32, 64, 128])
+@pytest.mark.parametrize("ct", [2, 3, 4])
+def test_feedforward_exact(bits, ct):
+    a, b = _rand_pair(bits, bits)
+    _check(lambda x, y: feedforward_mul(x, y, ct=ct), a, b)
+
+
+def test_feedforward_3ca():
+    a, b = _rand_pair(64, 64)
+    _check(lambda x, y: feedforward_mul(x, y, ct=3, adder="3ca"), a, b)
+
+
+# -------------------------------------------------------------- karatsuba
+
+@pytest.mark.parametrize("bits", [32, 64, 128, 256])
+@pytest.mark.parametrize("levels", [1, 2, 3])
+def test_karatsuba_exact(bits, levels):
+    a, b = _rand_pair(bits, bits)
+    _check(lambda x, y: karatsuba_mul(x, y, levels=levels), a, b)
+
+
+def test_karatsuba_odd_limbs():
+    a, b = _rand_pair(48, 48)   # 3 limbs -> internal pad to 4
+    _check(lambda x, y: karatsuba_mul(x, y, levels=1), a, b)
+
+
+def test_karatsuba_3ca():
+    a, b = _rand_pair(128, 128)
+    _check(lambda x, y: karatsuba_mul(x, y, levels=2, adder="3ca"), a, b)
+
+
+# ---------------------------------------------------------------- signed
+
+@pytest.mark.parametrize("arch,ct", [("star", 1), ("fb", 2), ("ff", 2),
+                                     ("karatsuba", 3)])
+def test_signed_mul(arch, ct):
+    bits = 64
+    a, b = _rand_pair(bits, bits)
+    cfg = MCIMConfig(arch=arch, ct=ct, signed=True)
+    out = np.asarray(mcim_mul(jnp.asarray(a), jnp.asarray(b), cfg))
+    width = 2 * bits
+    for ai, bi, oi in zip(a, b, out):
+        ua, ub = L.from_limbs(ai), L.from_limbs(bi)
+        sa = ua - (1 << bits) if ua >> (bits - 1) else ua
+        sb = ub - (1 << bits) if ub >> (bits - 1) else ub
+        expect = (sa * sb) % (1 << width)
+        assert L.from_limbs(oi) == expect
+
+
+# ---------------------------------------------------------- property-based
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 2**128 - 1), st.integers(0, 2**128 - 1),
+       st.sampled_from([("fb", 2, 1), ("fb", 5, 1), ("ff", 2, 1),
+                        ("ff", 3, 1), ("karatsuba", 3, 1),
+                        ("karatsuba", 3, 2), ("star", 1, 1)]))
+def test_property_all_archs_match_oracle(x, y, spec):
+    arch, ct, levels = spec
+    a = jnp.asarray(L.to_limbs(x, 8))[None]
+    b = jnp.asarray(L.to_limbs(y, 8))[None]
+    cfg = MCIMConfig(arch=arch, ct=ct, levels=levels)
+    out = np.asarray(mcim_mul(a, b, cfg))[0]
+    assert L.from_limbs(out) == x * y
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**64 - 1), st.integers(2, 8))
+def test_property_edge_operands(x, ct):
+    """Edge cases: 0, 1, all-ones against a random operand."""
+    for y in (0, 1, 2**64 - 1, 2**63):
+        a = jnp.asarray(L.to_limbs(x, 4))[None]
+        b = jnp.asarray(L.to_limbs(y, 4))[None]
+        out = np.asarray(feedback_mul(a, b, ct=ct))[0]
+        assert L.from_limbs(out) == x * y
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1))
+def test_property_mul32x32(x, y):
+    lo, hi = mul32x32_64(jnp.uint32(x), jnp.uint32(y))
+    got = (int(hi) << 32) | int(lo)
+    assert got == x * y
+
+
+# ------------------------------------------------------------ limb helpers
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2**256 - 1))
+def test_limb_roundtrip(x):
+    assert L.from_limbs(L.to_limbs(x, 16)) == x
+
+
+def test_final_adders_agree():
+    cols = jnp.asarray(RNG.integers(0, 2**20, size=(4, 11), dtype=np.uint32))
+    a1 = np.asarray(L.final_adder_1ca(cols))
+    a3 = np.asarray(L.final_adder_3ca(cols))
+    np.testing.assert_array_equal(a1, a3)
+
+
+def test_ppm_column_bound():
+    """Column sums stay far below uint32 overflow for supported widths."""
+    a, b = _rand_pair(512, 512, batch=2)
+    cols = np.asarray(L.ppm(jnp.asarray(a), jnp.asarray(b)))
+    assert cols.max() < 2**28  # 2*32 limbs * 2^16 ~ 2^22
+
+
+def test_vmap_and_jit_compose():
+    mul = jax.jit(lambda a, b: feedback_mul(a, b, ct=4))
+    a, b = _rand_pair(64, 64, batch=16)
+    out = np.asarray(jax.vmap(mul)(jnp.asarray(a), jnp.asarray(b)))
+    _check(lambda x, y: feedback_mul(x, y, ct=4), a, b)
+    ref = np.asarray(mul(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_array_equal(out, ref)

@@ -1,0 +1,145 @@
+"""Unit tests: sharding rules, roofline parsing, serve engine, configs,
+adafactor."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.launch import sharding as shd
+from repro.launch import roofline
+from repro.configs import get_config, ARCH_NAMES, SHAPES, SKIPS, \
+    cell_runnable
+from repro.models import build_model
+
+
+def _mesh(data=2, model=2):
+    devs = np.array(jax.devices()[:1] * (data * model)).reshape(data, model)
+    return Mesh(devs, ("data", "model"))
+
+
+# ------------------------------------------------------------- sharding
+
+def test_attn_cache_spec_kv_divisible():
+    m = _mesh(2, 2)
+    spec = shd.attn_cache_spec(m, (8, 128, 4, 64))
+    assert spec == P("data", None, "model", None)
+
+
+def test_attn_cache_spec_hd_fallback():
+    m = _mesh(2, 16)
+    # kv=8 % 16 != 0 -> head_dim takes the model axis
+    spec = shd.attn_cache_spec(m, (32, 1024, 8, 128))
+    assert spec == P("data", None, None, "model")
+
+
+def test_attn_cache_spec_seq_fallback_batch1():
+    m = _mesh(4, 2)
+    spec = shd.attn_cache_spec(m, (1, 1024, 2, 64))
+    assert spec == P(None, "data", "model", None)
+
+
+def test_cache_specs_tree_dispatch():
+    m = _mesh(2, 2)
+    cfg = get_config("zamba2-1.2b", smoke=True)
+    model = build_model(cfg)
+    tree = model.cache_spec(4, 64)
+    specs = shd.cache_specs(tree, m)
+    assert (jax.tree_util.tree_structure(specs)
+            == jax.tree_util.tree_structure(tree))
+
+
+def test_batch_spec_divisibility_fallback():
+    m = _mesh(4, 2)
+    assert shd.batch_spec(m, 2, 8)[0] in ("data", ("data",))
+    assert shd.batch_spec(m, 2, 3)[0] is None      # 3 % 4 != 0
+
+
+# ------------------------------------------------------------- roofline
+
+def test_roofline_terms_and_dominance():
+    t = roofline.roofline_terms(197e12, 819e9, 50e9)
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert abs(t["memory_s"] - 1.0) < 1e-9
+    assert abs(t["collective_s"] - 1.0) < 1e-9
+    t2 = roofline.roofline_terms(1e12, 819e9 * 5, 0)
+    assert t2["dominant"] == "memory"
+
+
+def test_parse_collectives_ring_costs():
+    hlo = """
+ENTRY %main (p: f32[16]) -> f32[16] {
+  %ar = f32[1024,512]{1,0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%sum
+  %ag = bf16[64,256]{1,0} all-gather(%y), replica_groups=[8,4]<=[32], dimensions={0}
+}
+"""
+    out = roofline.parse_collectives(hlo)
+    ar_bytes = 1024 * 512 * 4
+    assert out["all-reduce"]["result_bytes"] == ar_bytes
+    assert out["all-reduce"]["link_bytes"] == 2 * ar_bytes * 3 / 4
+    ag_bytes = 64 * 256 * 2
+    assert out["all-gather"]["link_bytes"] == ag_bytes * 3 / 4
+
+
+# --------------------------------------------------------------- configs
+
+def test_registry_complete_and_cells():
+    assert len(ARCH_NAMES) == 10
+    runnable = sum(cell_runnable(a, s) for a in ARCH_NAMES for s in SHAPES)
+    assert runnable == 40 - len(SKIPS) == 32
+
+
+def test_padded_vocab_shardable():
+    for a in ARCH_NAMES:
+        cfg = get_config(a)
+        assert cfg.padded_vocab % 256 == 0
+        assert cfg.padded_vocab >= cfg.vocab_size
+
+
+def test_reduced_configs_exercise_structure():
+    g3 = get_config("gemma3-1b", smoke=True)
+    assert g3.n_layers % (g3.local_per_global + 1) != 0   # has a tail
+    z2 = get_config("zamba2-1.2b", smoke=True)
+    assert z2.n_layers % z2.shared_attn_every != 0        # has a tail
+
+
+# -------------------------------------------------------------- adafactor
+
+def test_adafactor_reduces_loss_and_state_size():
+    from repro.optim.adafactor import (AdafactorConfig, init_state,
+                                       apply_updates, state_bytes)
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.standard_normal((64, 32)), jnp.float32),
+              "b": jnp.zeros((32,), jnp.float32)}
+    target = jax.tree_util.tree_map(jnp.ones_like, params)
+    cfg = AdafactorConfig(lr=0.05)
+    state = init_state(params, cfg)
+
+    def loss(p):
+        return sum(jnp.sum((a - b) ** 2) for a, b in zip(
+            jax.tree_util.tree_leaves(p),
+            jax.tree_util.tree_leaves(target)))
+
+    l0 = float(loss(params))
+    for _ in range(200):
+        grads = jax.grad(loss)(params)
+        params, state, _ = apply_updates(params, grads, state, cfg)
+    assert float(loss(params)) < 0.1 * l0
+    adam_b, af_b = state_bytes(params)
+    assert af_b < 0.1 * adam_b           # factored state is tiny
+
+    # factored state shapes
+    assert state["v"]["w"]["vr"].shape == (64,)
+    assert state["v"]["w"]["vc"].shape == (32,)
+    assert state["v"]["b"]["v"].shape == (32,)
+
+
+# ----------------------------------------------------------------- serve
+
+def test_serve_engine_continuous_batching():
+    from repro.launch.serve import main as serve_main
+    outputs = serve_main(["--arch", "mamba2-370m", "--smoke",
+                          "--requests", "3", "--slots", "2",
+                          "--prompt-len", "8", "--max-new", "4"])
+    assert len(outputs) == 3
+    assert all(len(v) >= 4 for v in outputs.values())

@@ -1,0 +1,252 @@
+"""Substrate tests: optimizer, RNG, exact accumulation, data, checkpoint."""
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (AdamWConfig, init_state, apply_updates,
+                         schedule_lr, global_norm)
+from repro.optim.compress import compress_grads, decompress_grads, init_error
+from repro.rng import philox4x32, random_uniform, random_tokens
+from repro.exact import f32_to_fixed, fixed_to_f32, exact_sum, exact_tree_sum
+from repro.data import DataConfig, SyntheticLM, BinTokenFile, make_source
+from repro.checkpoint import CheckpointManager
+
+RNG = np.random.default_rng(3)
+
+
+# ------------------------------------------------------------------ optim
+
+def _toy_params():
+    return {"w": jnp.asarray(RNG.standard_normal((4, 8)), jnp.float32),
+            "norm": jnp.zeros((8,), jnp.float32)}
+
+
+def test_adamw_reduces_quadratic_loss():
+    params = _toy_params()
+    cfg = AdamWConfig(lr=0.05, warmup_steps=0, total_steps=200,
+                      weight_decay=0.0)
+    state = init_state(params)
+    target = jax.tree_util.tree_map(lambda p: jnp.ones_like(p), params)
+
+    def loss(p):
+        return sum(jnp.sum((a - b) ** 2) for a, b in
+                   zip(jax.tree_util.tree_leaves(p),
+                       jax.tree_util.tree_leaves(target)))
+
+    l0 = float(loss(params))
+    for _ in range(100):
+        grads = jax.grad(loss)(params)
+        params, state, _ = apply_updates(params, grads, state, cfg)
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_adamw_weight_decay_mask():
+    """Norm-like params must not be decayed."""
+    params = _toy_params()
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, weight_decay=1.0,
+                      clip_norm=None)
+    state = init_state(params)
+    zero_grads = jax.tree_util.tree_map(jnp.zeros_like, params)
+    new, _, _ = apply_updates(params, zero_grads, state, cfg)
+    # w decays toward zero; norm untouched
+    assert float(jnp.abs(new["w"]).sum()) < float(jnp.abs(params["w"]).sum())
+    np.testing.assert_array_equal(np.asarray(new["norm"]),
+                                  np.asarray(params["norm"]))
+
+
+def test_grad_clip_bounds_update():
+    params = _toy_params()
+    cfg = AdamWConfig(lr=1e-3, clip_norm=1.0, warmup_steps=0)
+    state = init_state(params)
+    huge = jax.tree_util.tree_map(lambda p: 1e6 * jnp.ones_like(p), params)
+    _, _, stats = apply_updates(params, huge, state, cfg)
+    assert float(stats["grad_norm"]) > 1e5      # reported pre-clip
+
+
+def test_schedule_shapes():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                      min_lr_ratio=0.1)
+    lrs = [float(schedule_lr(cfg, jnp.int32(s))) for s in (0, 5, 10, 60, 110)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[2] - 1.0) < 1e-6
+    assert lrs[3] < lrs[2]
+    assert abs(lrs[4] - 0.1) < 1e-2
+
+
+# --------------------------------------------------------------- compress
+
+def test_compress_roundtrip_error_feedback():
+    grads = {"a": jnp.asarray(RNG.standard_normal((16, 32)), jnp.float32)}
+    err = init_error(grads)
+    qs, ss, err2 = compress_grads(grads, err)
+    assert qs["a"].dtype == jnp.int8
+    back = decompress_grads(qs, ss, grads)
+    rel = (np.linalg.norm(np.asarray(back["a"] - grads["a"]))
+           / np.linalg.norm(np.asarray(grads["a"])))
+    assert rel < 0.02
+    # error feedback holds exactly the residual
+    np.testing.assert_allclose(np.asarray(err2["a"]),
+                               np.asarray(grads["a"] - back["a"]),
+                               rtol=0, atol=1e-6)
+
+
+def test_error_feedback_debiases_over_steps():
+    """Mean of dequantized grads converges to the true constant grad."""
+    g = jnp.full((8, 64), 0.003, jnp.float32) \
+        + jnp.asarray(RNG.standard_normal((8, 64)) * 1e-5, jnp.float32)
+    grads = {"g": g}
+    err = init_error(grads)
+    acc = np.zeros((8, 64), np.float32)
+    n = 20
+    for _ in range(n):
+        qs, ss, err = compress_grads(grads, err)
+        acc += np.asarray(decompress_grads(qs, ss, grads)["g"])
+    np.testing.assert_allclose(acc / n, np.asarray(g), rtol=0.02, atol=2e-4)
+
+
+# -------------------------------------------------------------------- rng
+
+def test_philox_known_vector():
+    """Philox4x32-10 reference vector (Random123): counter=0, key=0."""
+    ctr = jnp.zeros((1, 4), jnp.uint32)
+    key = jnp.zeros((1, 2), jnp.uint32)
+    out = np.asarray(philox4x32(ctr, key))[0]
+    expect = np.array([0x6627E8D5, 0xE169C58D, 0xBC57AC4C, 0x9B00DBD8],
+                      dtype=np.uint32)
+    np.testing.assert_array_equal(out, expect)
+
+
+def test_philox_determinism_and_uniformity():
+    offs = jnp.arange(0, 4096, dtype=jnp.uint32)
+    u1 = np.asarray(random_uniform(42, 7, offs))
+    u2 = np.asarray(random_uniform(42, 7, offs))
+    np.testing.assert_array_equal(u1, u2)
+    assert 0.45 < u1.mean() < 0.55
+    assert u1.min() >= 0 and u1.max() < 1
+    u3 = np.asarray(random_uniform(43, 7, offs))
+    assert not np.array_equal(u1, u3)
+
+
+# ------------------------------------------------------------------ exact
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False, width=32),
+                min_size=2, max_size=50))
+def test_exact_sum_order_invariant(vals):
+    x = jnp.asarray(np.array(vals, np.float32))
+    s1 = float(exact_sum(x))
+    perm = np.array(vals, np.float32)
+    rng = np.random.default_rng(0)
+    for _ in range(4):
+        rng.shuffle(perm)
+        s2 = float(exact_sum(jnp.asarray(perm)))
+        assert s1 == s2            # BIT-exact, not approx
+
+
+def test_exact_sum_accuracy():
+    x = np.asarray(RNG.standard_normal(1000), np.float32)
+    got = float(exact_sum(jnp.asarray(x)))
+    want = float(np.sum(x.astype(np.float64)))
+    assert abs(got - want) < 1e-4
+
+
+def test_fixed_roundtrip():
+    x = jnp.asarray(np.array([0.0, 1.0, -1.0, 3.14159, -2.5e-7, 1e6],
+                             np.float32))
+    back = np.asarray(fixed_to_f32(f32_to_fixed(x)))
+    np.testing.assert_allclose(back, np.asarray(x), rtol=1e-6, atol=2e-12)
+
+
+def test_exact_tree_sum_matches_float():
+    trees = [{"a": jnp.asarray(RNG.standard_normal((4, 4)), jnp.float32)}
+             for _ in range(8)]
+    got = np.asarray(exact_tree_sum(trees)["a"])
+    want = sum(np.asarray(t["a"], np.float64) for t in trees)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------------- data
+
+def test_synthetic_deterministic_and_disjoint():
+    cfg = DataConfig(vocab_size=1000, seq_len=16, global_batch=8)
+    src = SyntheticLM(cfg)
+    b1, b2 = src.batch_at(3), src.batch_at(3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = src.batch_at(4)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # next-token alignment
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_synthetic_host_sharding_disjoint():
+    cfg = DataConfig(vocab_size=1000, seq_len=16, global_batch=8)
+    h0 = SyntheticLM(cfg, host_index=0, host_count=2)
+    h1 = SyntheticLM(cfg, host_index=1, host_count=2)
+    full = SyntheticLM(cfg)
+    b = full.batch_at(5)
+    np.testing.assert_array_equal(
+        np.concatenate([h0.batch_at(5)["tokens"], h1.batch_at(5)["tokens"]]),
+        b["tokens"])
+
+
+def test_binfile_source(tmp_path):
+    data = RNG.integers(0, 60000, 10_000, dtype=np.uint16)
+    path = tmp_path / "corpus.bin"
+    data.tofile(path)
+    cfg = DataConfig(vocab_size=60000, seq_len=64, global_batch=4,
+                     source="binfile", path=str(path))
+    src = make_source(cfg)
+    b1, b2 = src.batch_at(0), src.batch_at(0)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (4, 64)
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+# -------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"params": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4)},
+            "opt": {"step": jnp.int32(7)}}
+    mgr.save(7, tree)
+    like = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    out = mgr.restore(7, like)
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))
+    assert int(out["opt"]["step"]) == 7
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"x": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_crc_detects_corruption(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"x": jnp.arange(16, dtype=jnp.float32)}
+    path = mgr.save(1, tree)
+    fn = os.path.join(path, "arr_000000.npy")
+    arr = np.load(fn)
+    arr[0] += 1
+    np.save(fn, arr)
+    with pytest.raises(IOError):
+        mgr.restore(1, tree)
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"x": jnp.ones((128, 128))}
+    mgr.save_async(10, tree)
+    mgr.wait()
+    assert mgr.latest_step() == 10
+    out = mgr.restore(10, tree)
+    np.testing.assert_array_equal(np.asarray(out["x"]),
+                                  np.asarray(tree["x"]))

@@ -1,0 +1,121 @@
+"""Integration tests for the fault-tolerant trainer."""
+import os
+import signal
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.optim import AdamWConfig
+from repro.runtime import TrainerConfig, train, make_train_step
+from repro.data import DataConfig, SyntheticLM, PatternLM
+
+
+def _setup(tmp_path, steps=8, **tkw):
+    cfg = get_config("qwen3-32b", smoke=True)
+    model = build_model(cfg)
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=4,
+                      source="pattern")
+    src = PatternLM(data)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=steps)
+    tcfg = TrainerConfig(steps=steps, checkpoint_every=4,
+                         checkpoint_dir=str(tmp_path), log_every=0, **tkw)
+    return model, src, opt, tcfg
+
+
+def test_train_loss_decreases(tmp_path):
+    model, src, opt, tcfg = _setup(tmp_path, steps=10)
+    res = train(model, src, opt, tcfg, resume=False)
+    assert res.final_step == 10
+    assert res.skipped_steps == 0
+    assert np.mean(res.losses[-3:]) < np.mean(res.losses[:3])
+
+
+def test_resume_from_checkpoint(tmp_path):
+    model, src, opt, tcfg = _setup(tmp_path, steps=4)
+    res1 = train(model, src, opt, tcfg, resume=False)
+    assert res1.final_step == 4
+    # second run continues to step 8 from the saved step-4 state
+    tcfg2 = TrainerConfig(steps=8, checkpoint_every=4,
+                          checkpoint_dir=str(tmp_path), log_every=0)
+    res2 = train(model, src, opt, tcfg2, resume=True)
+    assert res2.final_step == 8
+    assert len(res2.losses) == 4            # only steps 4..7 executed
+
+
+def test_nonfinite_grad_guard():
+    cfg = get_config("qwen3-32b", smoke=True)
+    model = build_model(cfg)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=0)
+    step_fn = make_train_step(model, opt)
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.optim import init_state
+    state = init_state(params)
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 64)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 64)),
+                              jnp.int32),
+        "mask": jnp.full((2, 64), jnp.inf, jnp.float32),  # poison -> inf loss
+    }
+    p0 = jax.tree_util.tree_leaves(params)[0].copy()
+    new_params, new_state, stats = step_fn(params, state, batch)
+    assert not bool(stats["finite"])
+    # params unchanged on the poisoned step
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree_util.tree_leaves(new_params)[0]),
+        np.asarray(p0))
+    assert int(new_state["step"]) == 1
+
+
+def test_exact_accum_microbatches_match_order(tmp_path):
+    """MCIM fixed-point accumulation: microbatch order cannot matter."""
+    cfg = get_config("mamba2-370m", smoke=True)
+    model = build_model(cfg)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=0)
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 64)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 64)),
+                              jnp.int32),
+        "mask": jnp.ones((4, 64), jnp.float32),
+    }
+    from repro.optim import init_state
+    fn = make_train_step(model, opt, microbatches=2, exact_accum=True)
+    copy = lambda t: jax.tree_util.tree_map(jnp.copy, t)
+    p1, _, s1 = fn(copy(params), init_state(params), batch)
+    # permuted microbatch order (swap halves of the batch)
+    perm = jnp.asarray([2, 3, 0, 1])
+    batch2 = jax.tree_util.tree_map(lambda x: x[perm], batch)
+    p2, _, s2 = fn(copy(params), init_state(params), batch2)
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sigterm_triggers_checkpoint(tmp_path):
+    """Preemption handling: SIGTERM mid-training checkpoints and stops."""
+    import threading
+
+    model, src, opt, tcfg = _setup(tmp_path, steps=200)
+
+    def send_sigterm():
+        os.kill(os.getpid(), signal.SIGTERM)
+
+    timer = threading.Timer(6.0, send_sigterm)
+    timer.start()
+    try:
+        res = train(model, src, opt, tcfg, resume=False)
+    finally:
+        timer.cancel()
+    # stopped early and left a restorable checkpoint at the stop step
+    assert res.final_step < 200
+    from repro.checkpoint import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path))
+    assert mgr.latest_step() == res.final_step

@@ -1,0 +1,73 @@
+"""Functional simulation of the paper's use case 1 (Sec. V-E):
+
+an application needs TP = 3.5 multiplications/cycle.  The conventional
+bank rounds up to 4 Star multipliers; the MCIM bank uses 3 Star + one
+CT=2 folded multiplier.  We simulate both banks cycle by cycle over a
+stream of multiplications and assert (a) identical results, (b) the
+MCIM bank sustains the required throughput with the area the planner
+claims (< conventional)."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import limbs as L
+from repro.core import planner, area_model
+from repro.core.mcim import MCIMConfig
+from repro.core.schoolbook import star_mul, feedback_mul
+
+RNG = np.random.default_rng(33)
+BITS = 32
+N_LIMBS = L.n_limbs_for_bits(BITS)
+
+
+def test_tp_3_5_bank_functional():
+    n_ops = 7 * 8                       # 3.5 ops/cycle over 16 cycles
+    a = L.random_limbs(RNG, (n_ops,), BITS)
+    b = L.random_limbs(RNG, (n_ops,), BITS)
+    expect = [L.from_limbs(x) * L.from_limbs(y) for x, y in zip(a, b)]
+
+    # --- MCIM bank: 3 Star (1 op/cycle each) + 1 FB CT=2 (1 op / 2 cyc)
+    results = {}
+    cycles = 0
+    i = 0
+    fb_busy_until = -1
+    fb_pending = None
+    while len(results) < n_ops:
+        # the three Star units issue one multiplication each cycle
+        for _ in range(3):
+            if i < n_ops:
+                out = star_mul(jnp.asarray(a[i])[None],
+                               jnp.asarray(b[i])[None])[0]
+                results[i] = L.from_limbs(np.asarray(out))
+                i += 1
+        # the folded unit accepts a new op every 2 cycles
+        if cycles >= fb_busy_until and i < n_ops:
+            fb_pending = i
+            out = feedback_mul(jnp.asarray(a[i])[None],
+                               jnp.asarray(b[i])[None], ct=2)[0]
+            results[i] = L.from_limbs(np.asarray(out))
+            i += 1
+            fb_busy_until = cycles + 2
+        cycles += 1
+
+    assert [results[j] for j in range(n_ops)] == expect
+    # sustained throughput >= 3.5/cycle
+    assert n_ops / cycles >= 3.5 - 1e-9, (n_ops, cycles)
+
+    # --- area: MCIM bank beats the round-up-to-4-Star bank -------------
+    plan = planner.plan_throughput(BITS, BITS, 3.5)
+    conv = planner.star_bank_area(BITS, BITS, 3.5)
+    assert plan.area < conv
+    star_area = area_model.area_um2(BITS, BITS, MCIMConfig(arch="star",
+                                                           ct=1))
+    fb_area = area_model.area_um2(BITS, BITS, MCIMConfig(arch="fb", ct=2))
+    assert abs(plan.area - (3 * star_area + fb_area)) < 1e-6
+
+
+def test_tp_5_6_combination_bank():
+    """Paper Sec. V-B: one CT=2 + one CT=3 -> TP 5/6 with area savings."""
+    from fractions import Fraction
+    plan = planner.plan_throughput(128, 128, Fraction(5, 6))
+    assert plan.throughput == Fraction(5, 6)
+    assert plan.area < planner.star_bank_area(128, 128, Fraction(5, 6))
+    cts = sorted(cfg.ct for _, cfg in plan.configs)
+    assert cts == [2, 3]
