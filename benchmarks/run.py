@@ -3,6 +3,7 @@
 Prints ``name,us_per_call,derived`` CSV.  Sections:
   paper_tables    -- Tables II..X area/timing reproductions (area model)
   kernel_bench    -- core/kernel/system microbenchmarks
+  bank_bench      -- planner design points executed via core.bank
   roofline_report -- dry-run roofline summary (reads experiments/dryrun)
 """
 import sys
@@ -10,8 +11,9 @@ import sys
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from . import paper_tables, kernel_bench, roofline_report
-    for section in (paper_tables, kernel_bench, roofline_report):
+    from . import paper_tables, kernel_bench, bank_bench, roofline_report
+    for section in (paper_tables, kernel_bench, bank_bench,
+                    roofline_report):
         for fn in section.ALL:
             try:
                 fn()

@@ -1,0 +1,31 @@
+"""Version-compat shims for the jax API surface this repo uses.
+
+The repo targets the modern jax API (``jax.shard_map`` with
+``check_vma=``); older versions (< 0.5) expose the same function as
+``jax.experimental.shard_map.shard_map`` with the flag spelled
+``check_rep=``.  ``shard_map`` here accepts the modern signature and
+translates as needed, so call sites never branch on version.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+try:                                        # jax >= 0.5
+    from jax import shard_map as _shard_map
+except ImportError:                         # jax < 0.5
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = inspect.signature(_shard_map).parameters
+_HAS_CHECK_VMA = "check_vma" in _PARAMS
+
+
+@functools.wraps(_shard_map)
+def shard_map(f, /, *, mesh, in_specs, out_specs, check_vma: bool = True,
+              **kw):
+    if _HAS_CHECK_VMA:
+        kw["check_vma"] = check_vma
+    elif "check_rep" in _PARAMS:
+        kw["check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)

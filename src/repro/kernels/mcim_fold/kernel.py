@@ -91,32 +91,99 @@ def _fb_kernel(a_ref, b_ref, out_ref, acc_ref, *, la, lb, ct, chunk):
                 normalized[:, chunk:chunk + tail_limbs]
 
 
-@functools.partial(jax.jit, static_argnames=("ct", "tile_b", "interpret"))
+def _ff_kernel(a_ref, b_ref, out_ref, acc_ref, *, la, lb, ct, chunk):
+    """Feed-Forward (FF) schedule, paper Fig. 2.
+
+    No feedback shift: every grid step runs the shared PPM over this
+    cycle's B chunk and adds the carry-save columns into a *full-width*
+    accumulator at limb offset j*chunk (the "register file" holding all
+    CT partial results).  One final adder pass retires the whole product
+    on the last cycle.  The working set is the full LA+LB window --
+    exactly the paper's FF area trade: no feedback loop (pipelineable,
+    any final adder) in exchange for CT-fold register growth.
+    """
+    j = pl.program_id(1)                       # cycle index within CT
+    width = la + ct * chunk + 1
+
+    a = a_ref[...]                             # (TB, LA) canonical limbs
+    b = b_ref[...]                             # (TB, CHUNK) this cycle's chunk
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # ---- shared PPM: carry-save columns of a * b_chunk ------------------
+    cols = jnp.zeros((a.shape[0], la + chunk + 1), jnp.uint32)
+    for jj in range(chunk):
+        p = a * b[:, jj:jj + 1]                           # exact 16x16 in u32
+        cols = cols.at[:, jj:jj + la].add(p & MASK)
+        cols = cols.at[:, jj + 1:jj + la + 1].add(p >> RADIX_BITS)
+
+    # ---- 2*CT:2 compressor: add into the register file at j*chunk -------
+    window = acc_ref[:, pl.dslice(j * chunk, la + chunk + 1)]
+    acc_ref[:, pl.dslice(j * chunk, la + chunk + 1)] = window + cols
+
+    # ---- last cycle: single final-adder pass over the full width --------
+    @pl.when(j == ct - 1)
+    def _finish():
+        acc = acc_ref[...]
+        carry = jnp.zeros((a.shape[0],), jnp.uint32)
+        norm = []
+        for k in range(la + lb):
+            tot = (acc[:, k] if k < width else jnp.zeros_like(carry)) + carry
+            norm.append(tot & MASK)
+            carry = tot >> RADIX_BITS
+        out_ref[...] = jnp.stack(norm, axis=1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("ct", "tile_b", "schedule", "interpret"))
 def mcim_fold_mul(a: jax.Array, b: jax.Array, *, ct: int = 2,
-                  tile_b: int = 256, interpret: bool = True) -> jax.Array:
+                  tile_b: int = 256, schedule: str = "fb",
+                  interpret: bool = True) -> jax.Array:
     """Batched folded multiply: (B, LA) x (B, LB) -> (B, LA+LB) limbs.
+
+    ``schedule`` picks the paper architecture: "fb" (feedback loop,
+    1/CT-width accumulator) or "ff" (feed-forward register file, single
+    final adder).  Any CT >= 1 folds; the planner emits CT in
+    {1, 2, 3, 4, 6} (+8, 12 for deep fractional combinations).
 
     interpret=True runs the kernel body on CPU for validation; on a real
     TPU pass interpret=False.
     """
+    if schedule not in ("fb", "ff"):
+        raise ValueError(f"schedule must be fb or ff, got {schedule!r}")
+    if schedule == "ff" and ct < 2:
+        raise ValueError("FF is a multi-cycle design: ct >= 2")
     bsz, la = a.shape
     lb = b.shape[-1]
     chunk = -(-lb // ct)
-    b = jnp.pad(b, ((0, 0), (0, chunk * ct - lb)))
+    # CT > LB leaves trailing all-zero chunks: fold only the LB real
+    # limbs (the silicon would idle those cycles; the extra cycles exist
+    # in the throughput accounting, not in the datapath).
+    ct_run = -(-lb // chunk)
+    b = jnp.pad(b, ((0, 0), (0, chunk * ct_run - lb)))
     tile_b = min(tile_b, bsz)
     if bsz % tile_b:
         raise ValueError(f"batch {bsz} not divisible by tile {tile_b}")
 
-    kernel = functools.partial(_fb_kernel, la=la, lb=lb, ct=ct, chunk=chunk)
+    if schedule == "fb":
+        kernel = functools.partial(_fb_kernel, la=la, lb=lb, ct=ct_run,
+                                   chunk=chunk)
+        scratch_width = la + chunk + 1          # M + N/CT folded window
+    else:
+        kernel = functools.partial(_ff_kernel, la=la, lb=lb, ct=ct_run,
+                                   chunk=chunk)
+        scratch_width = la + ct_run * chunk + 1  # full FF register file
     return pl.pallas_call(
         kernel,
-        grid=(bsz // tile_b, ct),
+        grid=(bsz // tile_b, ct_run),
         in_specs=[
             pl.BlockSpec((tile_b, la), lambda i, j: (i, 0)),
             pl.BlockSpec((tile_b, chunk), lambda i, j: (i, j)),
         ],
         out_specs=pl.BlockSpec((tile_b, la + lb), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((bsz, la + lb), jnp.uint32),
-        scratch_shapes=[pltpu.VMEM((tile_b, la + chunk + 1), jnp.uint32)],
+        scratch_shapes=[pltpu.VMEM((tile_b, scratch_width), jnp.uint32)],
         interpret=interpret,
     )(a, b)

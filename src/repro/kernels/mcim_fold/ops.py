@@ -16,32 +16,37 @@ import os
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
 
 
-@functools.partial(jax.jit, static_argnames=("ct", "use_kernel"))
-def big_mul(a: jax.Array, b: jax.Array, ct: int = 2,
+@functools.partial(jax.jit, static_argnames=("ct", "schedule", "use_kernel"))
+def big_mul(a: jax.Array, b: jax.Array, ct: int = 2, schedule: str = "fb",
             use_kernel: bool = True) -> jax.Array:
     """Batched wide-int multiply with automatic batch-tile selection."""
     if a.ndim == 1:
         a, b = a[None], b[None]
-        return big_mul(a, b, ct=ct, use_kernel=use_kernel)[0]
+        return big_mul(a, b, ct=ct, schedule=schedule,
+                       use_kernel=use_kernel)[0]
     bsz = a.shape[0]
     if not use_kernel:
-        return mcim_fold_mul_ref(a, b, ct=ct)
+        return mcim_fold_mul_ref(a, b, ct=ct, schedule=schedule)
     tile = bsz
     for cand in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
         if bsz % cand == 0:
             tile = cand
             break
-    return mcim_fold_mul(a, b, ct=ct, tile_b=tile, interpret=INTERPRET)
+    return mcim_fold_mul(a, b, ct=ct, tile_b=tile, schedule=schedule,
+                         interpret=INTERPRET)
 
 
-def vmem_bytes_per_step(la: int, lb: int, ct: int, tile_b: int) -> int:
+def vmem_bytes_per_step(la: int, lb: int, ct: int, tile_b: int,
+                        schedule: str = "fb") -> int:
     """Per-grid-step VMEM working set (the kernel's 'area').
 
     Used by benchmarks to show the 1/CT footprint fold, the TPU analogue
-    of the paper's silicon-area saving.
+    of the paper's silicon-area saving.  The FF schedule keeps the full
+    register file live, so only its B-chunk input folds with CT.
     """
     chunk = -(-lb // ct)
+    acc = (la + ct * chunk + 1) if schedule == "ff" else (la + chunk + 1)
     words = tile_b * (la              # A tile
                       + chunk         # B chunk
-                      + (la + chunk + 1))  # accumulator window
+                      + acc)          # accumulator window / register file
     return words * 4

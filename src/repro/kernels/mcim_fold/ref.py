@@ -1,10 +1,14 @@
-"""Pure-jnp oracle for the mcim_fold kernel: the core FB multiplier."""
+"""Pure-jnp oracle for the mcim_fold kernel: the core FB/FF multipliers."""
 import jax
-import jax.numpy as jnp
 
-from repro.core.schoolbook import feedback_mul
+from repro.core.schoolbook import feedback_mul, feedforward_mul
 
 
-def mcim_fold_mul_ref(a: jax.Array, b: jax.Array, *, ct: int = 2) -> jax.Array:
-    """(B, LA) x (B, LB) -> (B, LA+LB) limbs, FB architecture."""
-    return feedback_mul(a, b, ct=ct)
+def mcim_fold_mul_ref(a: jax.Array, b: jax.Array, *, ct: int = 2,
+                      schedule: str = "fb") -> jax.Array:
+    """(B, LA) x (B, LB) -> (B, LA+LB) limbs, FB or FF architecture."""
+    if schedule == "fb":
+        return feedback_mul(a, b, ct=ct)
+    if schedule == "ff":
+        return feedforward_mul(a, b, ct=ct)
+    raise ValueError(f"schedule must be fb or ff, got {schedule!r}")

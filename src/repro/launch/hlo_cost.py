@@ -163,11 +163,17 @@ def _dot_flops(op: _Op, shapes: dict) -> float:
     ops_m = re.search(op.opcode + r"\(([^)]*)\)", op.line)
     contract = 1.0
     if ops_m and cdims:
-        first = ops_m.group(1).split(",")[0].strip()
-        lhs = first.lstrip("%")
-        lhs_shape = shapes.get(lhs)
-        if lhs_shape:
-            _, ldims = _shape_dims(lhs_shape)
+        operands = ops_m.group(1)
+        # Operands may be shape-prefixed ("f32[64,128]{1,0} %Arg_0.1") or
+        # bare ("%Arg_0.1"); the lhs name is the first %token either way.
+        lhs_text = None
+        pm = re.search(r"%([\w.\-]+)", operands)
+        if pm:
+            lhs_text = shapes.get(pm.group(1))
+        if lhs_text is None and _SHAPE.search(operands):
+            lhs_text = operands       # fall back to the embedded lhs shape
+        if lhs_text:
+            _, ldims = _shape_dims(lhs_text)
             for c in cdims:
                 if c < len(ldims):
                     contract *= ldims[c]

@@ -31,7 +31,13 @@ def _size(mesh, axes) -> int:
 
 
 def _div(dim, mesh, axes):
-    return axes if (axes and dim % _size(mesh, axes) == 0) else None
+    if not (axes and dim % _size(mesh, axes) == 0):
+        return None
+    # PartitionSpec equality distinguishes 'data' from ('data',): collapse
+    # single-axis tuples to the bare name so specs compare as documented.
+    if isinstance(axes, tuple) and len(axes) == 1:
+        return axes[0]
+    return axes
 
 
 def batch_spec(mesh, ndim: int, batch_dim_size: int) -> P:

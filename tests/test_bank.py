@@ -1,0 +1,122 @@
+"""Bank execution engine: bit-exactness vs the Python-int oracle and
+cycle accounting vs Plan.throughput, for every plan the planner emits
+at the paper's fractional design points.  Also covers the generalized
+mcim_fold kernel (FB + FF schedules, CT in {2, 3, 4, 6})."""
+from fractions import Fraction
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import limbs as L
+from repro.core import planner, bank
+from repro.kernels.mcim_fold import big_mul
+
+RNG = np.random.default_rng(41)
+
+TPS = (Fraction(1, 2), Fraction(7, 2), Fraction(5, 6))
+BITS = (32, 64, 128)
+
+
+def _operands(batch, bits):
+    a = jnp.asarray(L.random_limbs(RNG, (batch,), bits))
+    b = jnp.asarray(L.random_limbs(RNG, (batch,), bits))
+    expect = [L.from_limbs(np.asarray(x)) * L.from_limbs(np.asarray(y))
+              for x, y in zip(a, b)]
+    return a, b, expect
+
+
+# --------------------------------------------------------------- bit-exact
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("tp", TPS, ids=str)
+def test_bank_bit_exact_core(tp, bits):
+    plan = planner.plan_throughput(bits, bits, tp)
+    a, b, expect = _operands(3 * max(tp.numerator, 1), bits)
+    out = bank.execute(plan, a, b)
+    assert L.batch_from_limbs(np.asarray(out)) == expect
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("tp", TPS, ids=str)
+def test_bank_bit_exact_kernel(tp, bits):
+    plan = planner.plan_throughput(bits, bits, tp)
+    a, b, expect = _operands(2 * max(tp.numerator, 1), bits)
+    out = bank.execute(plan, a, b, backend="kernel")
+    assert L.batch_from_limbs(np.asarray(out)) == expect
+
+
+def test_bank_single_op_and_width_check():
+    plan = planner.plan_throughput(32, 32, Fraction(1, 2))
+    a, b, expect = _operands(1, 32)
+    out = bank.execute(plan, a[0], b[0])            # 1-D convenience
+    assert L.from_limbs(np.asarray(out)) == expect[0]
+    bk = bank.Bank(plan, 32, 32)
+    with pytest.raises(ValueError):
+        bk.execute(jnp.zeros((4, 8), jnp.uint32), jnp.zeros((4, 2),
+                                                            jnp.uint32))
+    with pytest.raises(ValueError):       # gather would clamp silently
+        bk.execute(jnp.zeros((8, 2), jnp.uint32), jnp.zeros((4, 2),
+                                                            jnp.uint32))
+
+
+# --------------------------------------------------------- cycle accounting
+
+@pytest.mark.parametrize("bits", (32, 128))
+@pytest.mark.parametrize("tp", TPS, ids=str)
+def test_bank_throughput_matches_plan(tp, bits):
+    """Over whole hyperperiods the round-robin schedule must sustain
+    exactly the plan's claimed ops/cycle."""
+    plan = planner.plan_throughput(bits, bits, tp)
+    bk = bank.Bank(plan, bits, bits)
+    batch = 4 * tp.numerator
+    rep = bk.report(batch)
+    assert rep.measured_throughput == plan.throughput, rep
+    assert rep.utilization == 1.0
+    # per-instance busy cycles never exceed the makespan
+    assert all(ir.busy_cycles <= rep.cycles for ir in rep.instances)
+    # every op is assigned exactly once
+    assert sum(ir.n_ops for ir in rep.instances) == batch
+
+
+def test_bank_report_attached_after_execute():
+    plan = planner.plan_throughput(32, 32, Fraction(7, 2))
+    bk = bank.Bank(plan, 32, 32)
+    a, b, _ = _operands(14, 32)
+    bk.execute(a, b)
+    assert bk.last_report is not None
+    assert bk.last_report.batch == 14
+    assert bk.last_report.measured_throughput <= plan.throughput
+
+
+def test_round_robin_schedule_is_work_conserving():
+    assign, cycles = bank.round_robin_schedule((1, 1, 1, 2), 56)
+    # 3 stars take 16 each, the CT=2 unit 8; last retirement at cycle 16
+    assert [len(x) for x in assign] == [16, 16, 16, 8]
+    assert cycles == 16
+
+
+# ------------------------------------------------------- generalized kernel
+
+@pytest.mark.parametrize("ct", (2, 3, 4, 6))
+@pytest.mark.parametrize("schedule", ("fb", "ff"))
+def test_mcim_fold_kernel_schedules(schedule, ct):
+    a, b, expect = _operands(16, 64)
+    out = big_mul(a, b, ct=ct, schedule=schedule)
+    assert L.batch_from_limbs(np.asarray(out)) == expect
+    ref = big_mul(a, b, ct=ct, schedule=schedule, use_kernel=False)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_mcim_fold_kernel_ct_exceeds_limbs():
+    """CT larger than the B-limb count: trailing cycles are idle, the
+    product must still be exact (32 bits = 2 limbs, CT=6)."""
+    a, b, expect = _operands(8, 32)
+    out = big_mul(a, b, ct=6, schedule="fb")
+    assert L.batch_from_limbs(np.asarray(out)) == expect
+
+
+def test_ff_kernel_rejects_single_cycle():
+    a, b, _ = _operands(4, 32)
+    with pytest.raises(ValueError):
+        big_mul(a, b, ct=1, schedule="ff")

@@ -62,7 +62,12 @@ def test_gemma3_ring_cache_decode():
 
 
 def test_gemma2_softcap_decode():
-    _check("gemma2-9b")
+    # gemma2's smoke-config logit std is ~0.25, so a single bf16 ulp at
+    # logit magnitude ~2.5 (= 2**-6 = 0.0156) already reads as 6% of std.
+    # Observed decode-vs-prefill gap is exactly 1 ulp on one vocab entry
+    # (everything else <= 0.004); structural cache bugs show up as
+    # O(1-10x), so 0.1 still catches them.
+    _check("gemma2-9b", atol_scale=0.1)
 
 
 def test_moe_decode_token_choice():

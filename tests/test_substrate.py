@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.optim import (AdamWConfig, init_state, apply_updates,
