@@ -4,21 +4,25 @@ For each (bits, TP) design point from the paper's fractional-throughput
 use cases (Sec. V-B / V-E, Table VIII widths), build the planner's bank,
 execute a batch through ``core.bank``, and record
 
-  * measured throughput (ops/cycle from the round-robin schedule) vs the
+  * measured throughput (ops/cycle from the dispatch schedule) vs the
     plan's claimed throughput,
+  * per-scheduler makespans (round_robin / greedy / streaming) so the
+    policy comparison is tracked per PR -- greedy's earliest-completion
+    dispatch must never lose to round-robin,
   * bit-exactness of the executed batch vs the Python-int oracle,
   * the per-step VMEM working set (the TPU 'area') vs the
     round-up-to-integer Star bank,
   * the planner's ASIC-area estimate vs the conventional Star bank.
 
 Emits ``BENCH_bank.json`` (repo root, override with --out) and the
-harness CSV rows.
+harness CSV rows.  ``--smoke`` runs a 6-point subset for CI.
 """
 from __future__ import annotations
 
+import argparse
 import json
+import math
 import os
-import sys
 import time
 from fractions import Fraction
 
@@ -28,7 +32,6 @@ import jax.numpy as jnp
 
 from repro.core import limbs as L
 from repro.core import planner, bank
-from repro.core.mcim import MCIMConfig
 from repro.kernels.mcim_fold import vmem_bytes_per_step
 
 RNG = np.random.default_rng(17)
@@ -42,6 +45,11 @@ DESIGN_POINTS = [
                Fraction(1, 6), Fraction(7, 2), Fraction(5, 6))
 ]
 
+SMOKE_POINTS = [
+    (bits, tp)
+    for bits in (16, 32)
+    for tp in (Fraction(1, 2), Fraction(7, 2), Fraction(5, 6))
+]
 
 def _row(name, us, derived):
     print(f"{name},{us:.2f},{derived}")
@@ -64,8 +72,19 @@ def run_design_point(bits: int, tp: Fraction, batch_mult: int = 4) -> dict:
     exact = L.batch_from_limbs(np.asarray(out)) == expect
 
     rep = bk.last_report
+    # scheduler policy comparison on the same (cts, batch) instance set;
+    # streaming gets a real arrival trace (ceil(TP) ops/cycle, the rate
+    # the bank is provisioned for) -- with all ops at cycle 0 it would
+    # just reproduce round_robin
+    cts = tuple(cfg.ct for cfg in bk.instances)
+    rate = max(1, math.ceil(tp))
+    streaming = bank.StreamingScheduler(arrival_rate=rate)
+    makespans = {
+        "round_robin": bank.round_robin_schedule(cts, batch)[1],
+        "greedy": bank.greedy_schedule(cts, batch)[1],
+        "streaming": streaming.schedule(cts, batch)[1],
+    }
     # conventional bank: ceil(TP) Star instances
-    import math
     n_star = max(1, math.ceil(tp))
     la = L.n_limbs_for_bits(bits)
     star_ws = n_star * vmem_bytes_per_step(la, la, 1, bk.tile_b)
@@ -83,6 +102,9 @@ def run_design_point(bits: int, tp: Fraction, batch_mult: int = 4) -> dict:
         "measured_throughput": str(rep.measured_throughput),
         "plan_throughput": str(rep.plan_throughput),
         "utilization": rep.utilization,
+        "scheduler_makespans": makespans,
+        "streaming_arrival_rate": rate,
+        "greedy_vs_round_robin": makespans["greedy"] / makespans["round_robin"],
         "bit_exact": bool(exact),
         "working_set_bytes": rep.working_set_bytes,
         "star_bank_working_set_bytes": star_ws,
@@ -94,22 +116,27 @@ def run_design_point(bits: int, tp: Fraction, batch_mult: int = 4) -> dict:
     }
 
 
-def bench_bank(out_path: str | None = None):
+def bench_bank(out_path: str | None = None, smoke: bool = False):
     """Execute every design point; emit CSV rows + BENCH_bank.json."""
+    points = SMOKE_POINTS if smoke else DESIGN_POINTS
     results = []
-    for bits, tp in DESIGN_POINTS:
+    for bits, tp in points:
         r = run_design_point(bits, tp)
         results.append(r)
+        ms = r["scheduler_makespans"]
         _row(f"bank.{bits}b_tp{tp.numerator}_{tp.denominator}",
              r["wall_us_first_call"],
              f"exact={r['bit_exact']} util={r['utilization']:.3f} "
-             f"cycles={r['cycles']} ws_saving={r['working_set_saving']:.0%} "
+             f"cycles={r['cycles']} "
+             f"rr={ms['round_robin']} greedy={ms['greedy']} "
+             f"stream={ms['streaming']} "
+             f"ws_saving={r['working_set_saving']:.0%} "
              f"area_saving={r['area_saving']:.0%}")
     path = out_path or os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
         "BENCH_bank.json")
     with open(path, "w") as f:
-        json.dump({"design_points": results}, f, indent=1)
+        json.dump({"design_points": results, "smoke": smoke}, f, indent=1)
     _row("bank.artifact", 0.0, f"wrote={path} n={len(results)}")
     return results
 
@@ -118,6 +145,13 @@ ALL = [bench_bank]
 
 
 if __name__ == "__main__":
-    out = sys.argv[1] if len(sys.argv) > 1 else None
+    ap = argparse.ArgumentParser()
+    ap.add_argument("out", nargs="?", default=None,
+                    help="output JSON path (default: repo-root "
+                         "BENCH_bank.json)")
+    ap.add_argument("--out", dest="out_flag", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI subset: 6 design points")
+    args = ap.parse_args()
     print("name,us_per_call,derived")
-    bench_bank(out)
+    bench_bank(args.out_flag or args.out, smoke=args.smoke)

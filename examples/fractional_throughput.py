@@ -47,6 +47,17 @@ def main():
         print(f"  instance {i}: {ir.config.arch}(ct={ir.ct})  "
               f"{ir.n_ops} ops, busy {ir.busy_cycles} cycles")
 
+    # pluggable dispatch: same bank, three scheduling policies
+    cts = tuple(cfg.ct for cfg in bk.instances)
+    print("\nscheduler makespans for this batch:")
+    for name in ("round_robin", "greedy", "streaming"):
+        _, makespan = bank.get_scheduler(name).schedule(cts, BATCH)
+        print(f"  {name:12s} {makespan} cycles")
+    _, tail = bank.greedy_schedule((1, 3), 2)
+    _, tail_rr = bank.round_robin_schedule((1, 3), 2)
+    print(f"  (on a heterogeneous tail, cts=(1,3) x 2 ops: "
+          f"round_robin={tail_rr}, greedy={tail})")
+
     conv_area = planner.star_bank_area(BITS, BITS, TP)
     print(f"\narea: bank {plan.area:.0f}um2 vs 4x Star {conv_area:.0f}um2 "
           f"-> saves {1 - plan.area / conv_area:.0%}")

@@ -1,0 +1,72 @@
+"""Sharded multi-bank execution: TP=3.5 replicated over a 2-device mesh.
+
+The paper's Sec. V-E bank sustains 3.5 multiplications/cycle on one
+chip.  Production serving replicates it: this demo forces a 2-device
+CPU mesh, runs ``bank.sharded_execute`` so each device executes one
+full bank replica on half the batch, and shows that
+
+  * the gathered results are bit-exact vs Python's bigints (and vs the
+    single-bank engine),
+  * the output really lives sharded along the mesh axis,
+  * the aggregate throughput is N_devices x the per-replica rate
+    (2 x 3.5 = 7 ops/cycle here),
+  * the greedy scheduler's makespan never loses to round-robin.
+
+  PYTHONPATH=src python examples/sharded_bank.py
+"""
+import os
+
+# must be set before the first jax init: fake 2 CPU devices
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=2")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import limbs as L
+from repro.core import planner, bank
+
+BITS = 32
+TP = 3.5
+BATCH = 56                      # 28 ops per device = 8 hyperperiods each
+
+
+def main():
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    n_dev = mesh.shape["data"]
+    plan = planner.plan_throughput(BITS, BITS, TP)
+    print(f"mesh: {n_dev} devices over axis 'data'")
+    print(f"plan per replica: {plan.describe()}")
+
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(L.random_limbs(rng, (BATCH,), BITS))
+    b = jnp.asarray(L.random_limbs(rng, (BATCH,), BITS))
+
+    out = bank.sharded_execute(plan, a, b, mesh, "data")
+    got = L.batch_from_limbs(np.asarray(out))
+    expect = [L.from_limbs(np.asarray(x)) * L.from_limbs(np.asarray(y))
+              for x, y in zip(a, b)]
+    single = bank.execute(plan, a, b)
+    print(f"\nbit-exact over {BATCH} ops: {got == expect}")
+    print(f"identical to the single-bank engine: "
+          f"{np.array_equal(np.asarray(out), np.asarray(single))}")
+    print(f"output sharding spec: {out.sharding.spec}")
+
+    rep = bank.sharded_report(plan, BATCH, BITS, BITS, mesh, "data")
+    agg = n_dev * rep.measured_throughput
+    print(f"\nper replica: {rep.batch} ops in {rep.cycles} cycles "
+          f"-> {rep.measured_throughput} ops/cycle")
+    print(f"aggregate: {n_dev} replicas -> {agg} ops/cycle "
+          f"(plan claims {n_dev} x {rep.plan_throughput})")
+
+    # policy comparison on one replica's shard
+    local = BATCH // n_dev
+    cts = tuple(cfg.ct for count, cfg in plan.configs for _ in range(count))
+    _, rr = bank.round_robin_schedule(cts, local)
+    _, greedy = bank.greedy_schedule(cts, local)
+    print(f"\nscheduler makespans on a {local}-op shard: "
+          f"round_robin={rr}, greedy={greedy} (greedy never loses)")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,20 +8,21 @@ Public API:
   mul32x32_64      -- 32x32->64 multiply on uint32 lanes (for RNG / exact)
   planner          -- design-point selection (paper Table VIII policy)
   bank             -- executable multiplier banks for planner Plans
+                      (pluggable schedulers/backends + sharded execution)
   area_model       -- ASIC-area cost model used by benchmarks/
 """
 from . import limbs
 from . import area_model
 from . import planner
 from . import bank
-from .bank import Bank, BankReport
+from .bank import Bank, BankReport, sharded_execute
 from .mcim import MCIMConfig, mcim_mul, make_multiplier, mul32x32_64
 from .schoolbook import star_mul, feedback_mul, feedforward_mul
 from .karatsuba import karatsuba_mul, karatsuba_ppm
 
 __all__ = [
     "limbs", "area_model", "planner", "bank",
-    "Bank", "BankReport",
+    "Bank", "BankReport", "sharded_execute",
     "MCIMConfig", "mcim_mul", "make_multiplier", "mul32x32_64",
     "star_mul", "feedback_mul", "feedforward_mul",
     "karatsuba_mul", "karatsuba_ppm",

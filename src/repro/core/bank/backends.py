@@ -1,0 +1,112 @@
+"""Backend registry: how one bank instance actually multiplies.
+
+PR 2 hard-coded two string branches ("core" / "kernel") inside the bank
+monolith, with a silent core fallback for Karatsuba instances.  This
+module replaces the branches with registered ``InstanceBackend`` objects
+keyed by ``(arch, capability)``:
+
+  * ``arch``        -- the planner architecture: star | fb | ff | karatsuba
+  * ``capability``  -- the execution substrate: "core" (pure jnp
+                       ``mcim_mul``) or "kernel" (Pallas TPU kernels).
+
+Every planner arch now has a real Pallas path -- Star/FB/FF through the
+``kernels.mcim_fold`` FB/FF schedules, Karatsuba through the new folded
+CT=3 Karatsuba schedule in the same kernel family -- so the "kernel"
+capability needs no core fallback.  New substrates (e.g. a non-interpret
+TPU build, a GPU port) register additional capabilities without touching
+the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+from ..mcim import MCIMConfig, mcim_mul
+
+CAPABILITIES = ("core", "kernel")
+#: Back-compat alias: the PR-2 bank exposed the capability names as BACKENDS.
+BACKENDS = CAPABILITIES
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceBackend:
+    """One (arch, capability) execution strategy for a bank instance.
+
+    ``make_mul(cfg, la, lb)`` returns the batched multiplier
+    ``(B, LA) x (B, LB) -> (B, LA+LB)`` for that instance;
+    ``working_set(cfg, la, lb, tile_b)`` its per-step VMEM footprint in
+    bytes (the TPU analogue of the paper's silicon area).
+    """
+    arch: str
+    capability: str
+    make_mul: Callable        # (MCIMConfig, la, lb) -> batched mul fn
+    working_set: Callable     # (MCIMConfig, la, lb, tile_b) -> bytes
+
+
+_REGISTRY: dict = {}
+
+
+def register_backend(backend: InstanceBackend) -> InstanceBackend:
+    _REGISTRY[(backend.arch, backend.capability)] = backend
+    return backend
+
+
+def get_backend(arch: str, capability: str) -> InstanceBackend:
+    try:
+        return _REGISTRY[(arch, capability)]
+    except KeyError:
+        raise ValueError(
+            f"no backend registered for arch={arch!r} "
+            f"capability={capability!r}; "
+            f"registered: {sorted(_REGISTRY)}") from None
+
+
+def registered_backends() -> tuple:
+    """Snapshot of the registry keys (arch, capability)."""
+    return tuple(sorted(_REGISTRY))
+
+
+# ------------------------------------------------------------- core backends
+
+def _core_mul(cfg: MCIMConfig, la: int, lb: int):
+    return functools.partial(mcim_mul, config=cfg)
+
+
+def _vmem(cfg: MCIMConfig, la: int, lb: int, tile_b: int) -> int:
+    """Working set via the kernel-family area model; the core capability
+    reports the same figure (it models the *design*, not the substrate)."""
+    from repro.kernels.mcim_fold import vmem_bytes_per_step
+    if cfg.arch == "star":
+        return vmem_bytes_per_step(la, lb, 1, tile_b)
+    if cfg.arch == "ff":
+        return vmem_bytes_per_step(la, lb, cfg.ct, tile_b, schedule="ff")
+    if cfg.arch == "karatsuba":
+        return vmem_bytes_per_step(la, lb, cfg.ct, tile_b,
+                                   schedule="karatsuba")
+    return vmem_bytes_per_step(la, lb, cfg.ct, tile_b)
+
+
+for _arch in ("star", "fb", "ff", "karatsuba"):
+    register_backend(InstanceBackend(
+        arch=_arch, capability="core",
+        make_mul=_core_mul, working_set=_vmem))
+
+
+# ----------------------------------------------------------- kernel backends
+
+def _kernel_fold_mul(cfg: MCIMConfig, la: int, lb: int):
+    from repro.kernels.mcim_fold import big_mul
+    if cfg.arch == "star":
+        return functools.partial(big_mul, ct=1, schedule="fb")
+    if cfg.arch == "karatsuba":
+        return functools.partial(big_mul, ct=3, schedule="karatsuba")
+    return functools.partial(big_mul, ct=cfg.ct, schedule=cfg.arch)
+
+
+for _arch in ("star", "fb", "ff", "karatsuba"):
+    register_backend(InstanceBackend(
+        arch=_arch, capability="kernel",
+        make_mul=_kernel_fold_mul, working_set=_vmem))
+
+del _arch

@@ -1,30 +1,23 @@
 """Bank execution engine: run ``planner.Plan`` objects as real multipliers.
 
 ``planner.plan_throughput`` picks a *bank* of multiplier instances (e.g.
-TP=3.5 -> three Star + one CT=2 MCIM) but until now only estimated its
-area.  This module makes plans executable: a batch of multiplications is
-dispatched round-robin across the plan's instances exactly the way the
-paper's Sec. V-E use case issues work to the silicon bank -- each cycle,
-every instance that is free accepts the next pending multiplication; an
-instance with cycle time CT accepts one multiplication every CT cycles.
+TP=3.5 -> three Star + one CT=2 MCIM).  This module makes plans
+executable: a batch of multiplications is dispatched across the plan's
+instances by a pluggable :mod:`.schedule` policy exactly the way the
+paper's Sec. V-E use case issues work to the silicon bank.
 
 The resulting engine is
 
-  * bit-exact: every instance runs the matching ``mcim_mul`` config (or
-    the ``kernels.mcim_fold`` Pallas kernel), so the reassembled batch
-    equals the Python-int oracle;
+  * bit-exact: every instance runs its registered :mod:`.backends`
+    multiplier (pure-jnp ``mcim_mul`` or a Pallas kernel), so the
+    reassembled batch equals the Python-int oracle regardless of policy;
   * cycle-accounted: the dispatch schedule is simulated once per batch
     size (and cached), giving per-instance busy cycles and the bank
     makespan, so measured throughput can be checked against
     ``Plan.throughput``;
   * jit/pjit-compatible: the schedule is static for a given batch size,
-    so ``execute`` lowers to gathers + batched multiplies + scatters.
-
-Backends: "core" runs instances through ``mcim_mul`` (pure jnp);
-"kernel" routes Star/FB/FF instances through the folded Pallas kernel
-(``kernels.mcim_fold.big_mul``) and Karatsuba instances through the
-Karatsuba-PPM kernel when operand widths match (core fallback
-otherwise).
+    so ``execute`` lowers to gathers + batched multiplies + scatters
+    (and :mod:`.sharded` can replicate it across a mesh axis).
 """
 from __future__ import annotations
 
@@ -36,42 +29,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from . import limbs as L
-from .mcim import MCIMConfig, mcim_mul
-from .planner import Plan
-
-BACKENDS = ("core", "kernel")
-
-
-# ------------------------------------------------------------------ schedule
-
-@functools.lru_cache(maxsize=1024)
-def round_robin_schedule(cts: tuple, n_ops: int) -> tuple:
-    """Cycle-accurate round-robin issue of ``n_ops`` over instances.
-
-    ``cts[i]`` is instance i's cycle time (issue interval).  Each cycle,
-    instances are polled in order; a free instance accepts the next
-    pending op and stays busy for its CT.  Returns (assignment, cycles):
-    ``assignment[i]`` is the tuple of op indices instance i executes and
-    ``cycles`` is the bank makespan (cycle the last result retires).
-    """
-    n_inst = len(cts)
-    free_at = [0] * n_inst
-    assign = [[] for _ in range(n_inst)]
-    issued = 0
-    cycle = 0
-    while issued < n_ops:
-        for i in range(n_inst):
-            if issued >= n_ops:
-                break
-            if free_at[i] <= cycle:
-                assign[i].append(issued)
-                free_at[i] = cycle + cts[i]
-                issued += 1
-        cycle += 1
-    makespan = max((free_at[i] for i in range(n_inst) if assign[i]),
-                   default=0)
-    return tuple(tuple(ops) for ops in assign), makespan
+from .. import limbs as L
+from ..mcim import MCIMConfig
+from ..planner import Plan
+from .backends import BACKENDS, get_backend
+from .schedule import get_scheduler
 
 
 # ------------------------------------------------------------------ reports
@@ -96,6 +58,7 @@ class BankReport:
     instances: tuple                  # tuple[InstanceReport]
     plan_throughput: Fraction
     working_set_bytes: int            # sum of per-instance VMEM footprints
+    scheduler: str = "round_robin"    # policy that produced the makespan
 
     @property
     def measured_throughput(self) -> Fraction:
@@ -110,43 +73,15 @@ class BankReport:
 
 # ------------------------------------------------------------------ the bank
 
-def _instance_mul(cfg: MCIMConfig, la: int, lb: int, backend: str):
-    """The batched multiplier function for one bank instance."""
-    if backend == "core":
-        return functools.partial(mcim_mul, config=cfg)
-    # kernel backend
-    from repro.kernels.mcim_fold import big_mul
-    if cfg.arch in ("star", "fb"):
-        return functools.partial(big_mul, ct=cfg.ct if cfg.arch == "fb" else 1,
-                                 schedule="fb")
-    if cfg.arch == "ff":
-        return functools.partial(big_mul, ct=cfg.ct, schedule="ff")
-    # karatsuba: the PPM kernel requires equal operand widths; fall back
-    # to the core path otherwise.
-    if la == lb:
-        from repro.kernels.karatsuba_ppm import kara_mul
-        return kara_mul
-    return functools.partial(mcim_mul, config=cfg)
-
-
-def _instance_working_set(cfg: MCIMConfig, la: int, lb: int,
-                          tile_b: int) -> int:
-    """Per-step VMEM footprint of one instance (the TPU 'area')."""
-    from repro.kernels.mcim_fold import vmem_bytes_per_step
-    if cfg.arch == "star":
-        return vmem_bytes_per_step(la, lb, 1, tile_b)
-    if cfg.arch == "ff":
-        return vmem_bytes_per_step(la, lb, cfg.ct, tile_b, schedule="ff")
-    # fb; karatsuba folds its top level over CT=3 like FB
-    return vmem_bytes_per_step(la, lb, cfg.ct, tile_b)
-
-
 class Bank:
     """Executable multiplier bank for one ``planner.Plan``.
 
     ``execute(a, b)`` multiplies a batch of limb vectors
     (B, LA) x (B, LB) -> (B, LA+LB) bit-exactly; ``last_report`` /
-    ``report(batch)`` exposes the cycle accounting.
+    ``report(batch)`` exposes the cycle accounting.  ``backend`` picks
+    the instance substrate ("core" | "kernel"), ``scheduler`` the
+    dispatch policy ("round_robin" | "greedy" | "streaming" or any
+    registered :class:`~.schedule.Scheduler`).
     """
 
     # each distinct batch size compiles its own dispatch; bound the set
@@ -154,7 +89,8 @@ class Bank:
     MAX_COMPILED = 32
 
     def __init__(self, plan: Plan, bits_a: int, bits_b: int, *,
-                 backend: str = "core", tile_b: int = 256):
+                 backend: str = "core", scheduler="round_robin",
+                 tile_b: int = 256):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}")
         self.plan = plan
@@ -162,6 +98,7 @@ class Bank:
         self.la = L.n_limbs_for_bits(bits_a)
         self.lb = L.n_limbs_for_bits(bits_b)
         self.backend = backend
+        self.scheduler = get_scheduler(scheduler)
         self.tile_b = tile_b
         # expand [(count, cfg)] -> flat instance list, Stars first so the
         # fast units drain the head of the queue like the paper's bank
@@ -170,26 +107,34 @@ class Bank:
         if not self.instances:
             raise ValueError("plan has no instances")
         self._cts = tuple(cfg.ct for cfg in self.instances)
-        self._muls = tuple(_instance_mul(cfg, self.la, self.lb, backend)
-                           for cfg in self.instances)
+        self._backends = tuple(get_backend(cfg.arch, backend)
+                               for cfg in self.instances)
+        self._muls = tuple(be.make_mul(cfg, self.la, self.lb)
+                           for cfg, be in zip(self.instances, self._backends))
         self._compiled = {}           # batch size -> jitted execute
         self.last_report = None
 
     # -------------------------------------------------------------- reports
     def report(self, batch: int) -> BankReport:
-        assign, cycles = round_robin_schedule(self._cts, batch)
+        assign, cycles = self.scheduler.schedule(self._cts, batch)
         insts = tuple(
             InstanceReport(cfg, len(ops), len(ops) * cfg.ct)
             for cfg, ops in zip(self.instances, assign))
-        ws = sum(_instance_working_set(cfg, self.la, self.lb, self.tile_b)
-                 for cfg in self.instances)
+        ws = sum(be.working_set(cfg, self.la, self.lb, self.tile_b)
+                 for cfg, be in zip(self.instances, self._backends))
         return BankReport(batch=batch, cycles=cycles, instances=insts,
                           plan_throughput=self.plan.throughput,
-                          working_set_bytes=ws)
+                          working_set_bytes=ws,
+                          scheduler=self.scheduler.name)
 
     # -------------------------------------------------------------- execute
-    def _build(self, batch: int):
-        assign, _ = round_robin_schedule(self._cts, batch)
+    def dispatch_fn(self, batch: int):
+        """The pure (un-jitted) dispatch closure for one batch size.
+
+        Exposed so :mod:`.sharded` can wrap it in shard_map; ``execute``
+        wraps it in ``jax.jit``.
+        """
+        assign, _ = self.scheduler.schedule(self._cts, batch)
         idx = [np.asarray(ops, np.int32) for ops in assign]
         muls = self._muls
         la, lb = self.la, self.lb
@@ -203,7 +148,10 @@ class Bank:
                 out = out.at[ops].set(part)
             return out
 
-        return jax.jit(run)
+        return run
+
+    def _build(self, batch: int):
+        return jax.jit(self.dispatch_fn(batch))
 
     def execute(self, a: jax.Array, b: jax.Array) -> jax.Array:
         """(B, LA) x (B, LB) -> (B, LA+LB) limbs, bit-exact."""
@@ -211,8 +159,8 @@ class Bank:
             return self.execute(a[None], b[None])[0]
         batch = a.shape[0]
         if b.shape[0] != batch:
-            # without this, the gather in _build clamps out-of-range op
-            # indices and silently returns wrong products
+            # without this, the gather in dispatch_fn clamps out-of-range
+            # op indices and silently returns wrong products
             raise ValueError(
                 f"batch mismatch: a has {batch} ops, b has {b.shape[0]}")
         if a.shape[-1] != self.la or b.shape[-1] != self.lb:
@@ -229,37 +177,43 @@ class Bank:
 
     def describe(self) -> str:
         return (f"Bank[{self.plan.describe()}  backend={self.backend}  "
+                f"scheduler={self.scheduler.name}  "
                 f"{len(self.instances)} instances]")
 
 
 # ------------------------------------------------------------------ module API
 
 @functools.lru_cache(maxsize=64)
-def _bank_for(plan: Plan, bits_a: int, bits_b: int, backend: str) -> Bank:
-    return Bank(plan, bits_a, bits_b, backend=backend)
+def _bank_for(plan: Plan, bits_a: int, bits_b: int, backend: str,
+              scheduler: str = "round_robin") -> Bank:
+    return Bank(plan, bits_a, bits_b, backend=backend, scheduler=scheduler)
 
 
 def execute(plan: Plan, a: jax.Array, b: jax.Array, *,
-            backend: str = "core") -> jax.Array:
+            backend: str = "core",
+            scheduler: str = "round_robin") -> jax.Array:
     """One-shot bank execution: dispatch a batch across ``plan``'s
     instances and return the (B, LA+LB) limb products.
 
     Operand bit widths are taken from the limb counts.  Banks are cached
-    per (plan, widths, backend), so repeated calls re-use the compiled
-    dispatch.  Use ``last_report(plan, a, b)`` -- or a ``Bank`` object
-    directly -- for the cycle accounting.
+    per (plan, widths, backend, scheduler), so repeated calls re-use the
+    compiled dispatch.  Use ``last_report(plan, a, b)`` -- or a ``Bank``
+    object directly -- for the cycle accounting.
     """
     la = a.shape[-1] if a.ndim > 1 else a.shape[0]
     lb = b.shape[-1] if b.ndim > 1 else b.shape[0]
-    bank = _bank_for(plan, la * L.RADIX_BITS, lb * L.RADIX_BITS, backend)
+    bank = _bank_for(plan, la * L.RADIX_BITS, lb * L.RADIX_BITS, backend,
+                     scheduler)
     return bank.execute(a, b)
 
 
 def last_report(plan: Plan, a: jax.Array, b: jax.Array, *,
-                backend: str = "core") -> BankReport:
+                backend: str = "core",
+                scheduler: str = "round_robin") -> BankReport:
     """Cycle-accounting report for the batch shape of (a, b)."""
     la = a.shape[-1] if a.ndim > 1 else a.shape[0]
     lb = b.shape[-1] if b.ndim > 1 else b.shape[0]
-    bank = _bank_for(plan, la * L.RADIX_BITS, lb * L.RADIX_BITS, backend)
+    bank = _bank_for(plan, la * L.RADIX_BITS, lb * L.RADIX_BITS, backend,
+                     scheduler)
     batch = a.shape[0] if a.ndim > 1 else 1
     return bank.report(batch)

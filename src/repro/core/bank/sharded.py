@@ -1,0 +1,84 @@
+"""Sharded multi-bank execution: N replicated banks over a mesh axis.
+
+The paper's Sec. V-E bank sustains a fractional throughput on one chip;
+production serving replicates that bank across devices.  This module
+runs one bank *per device slice* along a named mesh axis via the
+``repro.compat`` shard_map shim: the global batch is split evenly, every
+device executes its shard through the same static dispatch (scheduler +
+backend resolved exactly as in :mod:`.engine`), and the results
+concatenate back bit-exactly -- each multiplication is computed by
+exactly one instance of one bank replica, so ``sharded_execute`` equals
+the single-bank oracle product-for-product.
+
+Partition specs come from :func:`repro.launch.sharding.bank_batch_spec`
+(the same divisibility-checked spec machinery the model runtime uses),
+so the bank composes with the launch layer's meshes instead of invented
+ad-hoc shardings.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .. import limbs as L
+from ..planner import Plan
+from .engine import Bank, BankReport
+
+
+def _local_batch(batch: int, mesh, axis: str) -> int:
+    # bank_batch_spec is the single owner of the axis-membership and
+    # divisibility validation; this just derives the shard size from it
+    from repro.launch.sharding import bank_batch_spec
+    bank_batch_spec(mesh, axis, 2, batch)
+    return batch // mesh.shape[axis]
+
+
+@functools.lru_cache(maxsize=64)
+def _sharded_fn(plan: Plan, bits_a: int, bits_b: int, backend: str,
+                scheduler: str, mesh, axis: str, local: int):
+    # Lazy imports: core must stay importable without touching the
+    # launch layer (and jax device state) at module-import time.
+    from repro.compat import shard_map
+    from repro.launch.sharding import bank_batch_spec
+
+    bank = Bank(plan, bits_a, bits_b, backend=backend, scheduler=scheduler)
+    run = bank.dispatch_fn(local)
+    spec = bank_batch_spec(mesh, axis, 2, local * mesh.shape[axis])
+    fn = shard_map(run, mesh=mesh, in_specs=(spec, spec), out_specs=spec,
+                   check_vma=False)
+    return jax.jit(fn)
+
+
+def sharded_execute(plan: Plan, a: jax.Array, b: jax.Array, mesh,
+                    axis: str, *, backend: str = "core",
+                    scheduler: str = "round_robin") -> jax.Array:
+    """Replicated-bank execution of (B, LA) x (B, LB) over ``mesh[axis]``.
+
+    Each of the ``mesh.shape[axis]`` device slices runs one full bank
+    replica on its B/N shard; the returned (B, LA+LB) limb products are
+    bit-exact vs the single-bank (and Python-bigint) oracle.  The global
+    batch must divide evenly; compiled sharded dispatches are cached per
+    (plan, widths, backend, scheduler, mesh, axis, shard size).
+    """
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError("sharded_execute expects batched (B, L) operands")
+    if a.shape[0] != b.shape[0]:
+        raise ValueError(
+            f"batch mismatch: a has {a.shape[0]} ops, b has {b.shape[0]}")
+    local = _local_batch(a.shape[0], mesh, axis)
+    fn = _sharded_fn(plan, a.shape[-1] * L.RADIX_BITS,
+                     b.shape[-1] * L.RADIX_BITS, backend,
+                     scheduler, mesh, axis, local)
+    return fn(a, b)
+
+
+def sharded_report(plan: Plan, batch: int, bits_a: int, bits_b: int,
+                   mesh, axis: str, *, backend: str = "core",
+                   scheduler: str = "round_robin") -> BankReport:
+    """Per-replica cycle accounting: the report of one bank running its
+    B/N shard (all replicas are identical, so one report describes the
+    whole sharded execution; aggregate throughput is N x measured)."""
+    local = _local_batch(batch, mesh, axis)
+    bank = Bank(plan, bits_a, bits_b, backend=backend, scheduler=scheduler)
+    return bank.report(local)

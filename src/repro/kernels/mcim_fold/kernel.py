@@ -136,6 +136,115 @@ def _ff_kernel(a_ref, b_ref, out_ref, acc_ref, *, la, lb, ct, chunk):
         out_ref[...] = jnp.stack(norm, axis=1)
 
 
+def _kara_carry(cols, out_limbs):
+    """Carry-propagate ``out_limbs`` canonical limbs out of column sums."""
+    carry = jnp.zeros((cols.shape[0],), jnp.uint32)
+    outs = []
+    for k in range(out_limbs):
+        tot = (cols[:, k] if k < cols.shape[1]
+               else jnp.zeros_like(carry)) + carry
+        outs.append(tot & MASK)
+        carry = tot >> RADIX_BITS
+    return jnp.stack(outs, axis=1)
+
+
+def _kara_kernel(a_ref, b_ref, out_ref, acc_ref, *, la, lb, n, half):
+    """Folded Karatsuba schedule (paper Fig. 3), CT=3: the temporal fold.
+
+    One *shared* half-width PPM runs once per grid step on the cycle's
+    operand pair -- cycle 0: (A0, B0) -> T0, cycle 1: (A1, B1) -> T1,
+    cycle 2: (A0+A1, B0+B1) -> T2 -- and a compressor feedback loop
+    accumulates the placed/complemented terms
+
+        P = T0 + T1<<2h + (T2 - T1 - T0)<<h
+
+    in the VMEM scratch accumulator (subtractions as NOT+1 columns, the
+    2**(16*width) wraps vanishing in the final truncation).  The final
+    adder runs once, on the last cycle -- in contrast to
+    ``karatsuba_ppm`` (the *spatial* fold: three PPMs in one step), this
+    kernel keeps exactly one PPM's worth of compute live per step, the
+    TPU analogue of the paper's shared-PPM silicon.
+    """
+    j = pl.program_id(1)                       # Karatsuba cycle, 0..2
+    hp = half + 1                              # shared-PPM port width
+    width = 2 * n
+    a = a_ref[...]                             # (TB, n) padded canonical limbs
+    b = b_ref[...]
+    tb = a.shape[0]
+    zero_col = jnp.zeros((tb, 1), jnp.uint32)
+
+    a0, a1 = a[:, :half], a[:, half:]
+    b0, b1 = b[:, :half], b[:, half:]
+    sa = _kara_carry(a0 + a1, hp)              # A0+A1, normalized to hp limbs
+    sb = _kara_carry(b0 + b1, hp)
+    a0p = jnp.concatenate([a0, zero_col], axis=1)
+    a1p = jnp.concatenate([a1, zero_col], axis=1)
+    b0p = jnp.concatenate([b0, zero_col], axis=1)
+    b1p = jnp.concatenate([b1, zero_col], axis=1)
+
+    # this cycle's operands for the ONE shared PPM
+    av = jnp.where(j == 0, a0p, jnp.where(j == 1, a1p, sa))
+    bv = jnp.where(j == 0, b0p, jnp.where(j == 1, b1p, sb))
+
+    # shared PPM + its 1CA: T_j normalized to 2*hp canonical limbs
+    cols = jnp.zeros((tb, 2 * hp), jnp.uint32)
+    for jj in range(hp):
+        p = av * bv[:, jj:jj + 1]                         # exact 16x16 in u32
+        cols = cols.at[:, jj:jj + hp].add(p & MASK)
+        cols = cols.at[:, jj + 1:jj + hp + 1].add(p >> RADIX_BITS)
+    t = _kara_carry(cols, 2 * hp)
+
+    def place(shift):
+        # jnp.pad, not .at[].add: a full-width scatter would close over an
+        # empty index constant, which pallas_call rejects
+        take = min(2 * hp, width - shift)
+        return jnp.pad(t[:, :take], ((0, 0), (shift, width - shift - take)))
+
+    def neg_place(shift):
+        # NOT+1 two's complement of (T_j << shift) mod 2**(16*width);
+        # the +1 is returned as a separate column-0 increment
+        inv = jnp.full((tb, width), jnp.uint32(MASK)) - place(shift)
+        return inv.at[:, 0].add(1)
+
+    # compressor feedback: accumulate this cycle's placed terms
+    @pl.when(j == 0)
+    def _t0():                                 # +T0<<0  -T0<<h
+        acc_ref[...] = place(0) + neg_place(half)
+
+    @pl.when(j == 1)
+    def _t1():                                 # +T1<<2h -T1<<h
+        acc_ref[...] = acc_ref[...] + place(2 * half) + neg_place(half)
+
+    # last cycle: +T2<<h, then the single final-adder pass
+    @pl.when(j == 2)
+    def _t2():
+        acc = acc_ref[...] + place(half)
+        out_ref[...] = _kara_carry(acc, la + lb)
+
+
+def _kara_fold_call(a, b, tile_b, interpret):
+    """pallas_call plumbing for the folded Karatsuba CT=3 schedule."""
+    bsz, la = a.shape
+    lb = b.shape[-1]
+    n = max(la, lb)
+    n += n % 2                                  # even split point
+    a = jnp.pad(a, ((0, 0), (0, n - la)))
+    b = jnp.pad(b, ((0, 0), (0, n - lb)))
+    kernel = functools.partial(_kara_kernel, la=la, lb=lb, n=n, half=n // 2)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz // tile_b, 3),
+        in_specs=[
+            pl.BlockSpec((tile_b, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_b, n), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, la + lb), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, la + lb), jnp.uint32),
+        scratch_shapes=[pltpu.VMEM((tile_b, 2 * n), jnp.uint32)],
+        interpret=interpret,
+    )(a, b)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("ct", "tile_b", "schedule", "interpret"))
 def mcim_fold_mul(a: jax.Array, b: jax.Array, *, ct: int = 2,
@@ -144,15 +253,25 @@ def mcim_fold_mul(a: jax.Array, b: jax.Array, *, ct: int = 2,
     """Batched folded multiply: (B, LA) x (B, LB) -> (B, LA+LB) limbs.
 
     ``schedule`` picks the paper architecture: "fb" (feedback loop,
-    1/CT-width accumulator) or "ff" (feed-forward register file, single
-    final adder).  Any CT >= 1 folds; the planner emits CT in
-    {1, 2, 3, 4, 6} (+8, 12 for deep fractional combinations).
+    1/CT-width accumulator), "ff" (feed-forward register file, single
+    final adder) or "karatsuba" (shared sub-PPM over the fixed CT=3
+    Karatsuba fold).  For fb/ff any CT >= 1 folds; the planner emits CT
+    in {1, 2, 3, 4, 6} (+8, 12 for deep fractional combinations).
 
     interpret=True runs the kernel body on CPU for validation; on a real
     TPU pass interpret=False.
     """
-    if schedule not in ("fb", "ff"):
-        raise ValueError(f"schedule must be fb or ff, got {schedule!r}")
+    if schedule not in ("fb", "ff", "karatsuba"):
+        raise ValueError(
+            f"schedule must be fb, ff or karatsuba, got {schedule!r}")
+    if schedule == "karatsuba":
+        if ct != 3:
+            raise ValueError("the folded Karatsuba schedule is fixed to CT=3")
+        bsz = a.shape[0]
+        tile_b = min(tile_b, bsz)
+        if bsz % tile_b:
+            raise ValueError(f"batch {bsz} not divisible by tile {tile_b}")
+        return _kara_fold_call(a, b, tile_b, interpret)
     if schedule == "ff" and ct < 2:
         raise ValueError("FF is a multi-cycle design: ct >= 2")
     bsz, la = a.shape

@@ -15,6 +15,32 @@ from .ref import mcim_fold_mul_ref
 import os
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
 
+_TILES = (512, 256, 128, 64, 32, 16, 8)
+
+
+def batch_tile(bsz: int) -> tuple:
+    """Pick (tile, pad) for a batch of ``bsz`` multiplications.
+
+    Prefer the largest candidate tile that divides the batch exactly.
+    Awkward batch sizes (e.g. a large prime, which has no candidate
+    divisor at all) used to degenerate into 1-row tiles -- thousands of
+    grid steps and per-step VMEM estimates scaled to the full batch.
+    Instead, pad the batch up to the nearest multiple of a candidate
+    tile wasting at most ~12.5% rows, and let the caller slice the
+    result back to ``bsz``; batches too small for any bounded-waste pad
+    run as one exact short tile.
+    """
+    for cand in _TILES:
+        if bsz % cand == 0:
+            return cand, 0
+    for cand in _TILES:
+        pad = -bsz % cand
+        if cand <= 2 * bsz and pad * 8 <= bsz:
+            return cand, pad
+    # no bounded-waste candidate: only reachable for bsz < 56 (an 8-row
+    # tile pads at most 7 rows), where one exact short tile is cheapest
+    return bsz, 0
+
 
 @functools.partial(jax.jit, static_argnames=("ct", "schedule", "use_kernel"))
 def big_mul(a: jax.Array, b: jax.Array, ct: int = 2, schedule: str = "fb",
@@ -27,13 +53,13 @@ def big_mul(a: jax.Array, b: jax.Array, ct: int = 2, schedule: str = "fb",
     bsz = a.shape[0]
     if not use_kernel:
         return mcim_fold_mul_ref(a, b, ct=ct, schedule=schedule)
-    tile = bsz
-    for cand in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
-        if bsz % cand == 0:
-            tile = cand
-            break
-    return mcim_fold_mul(a, b, ct=ct, tile_b=tile, schedule=schedule,
-                         interpret=INTERPRET)
+    tile, pad = batch_tile(bsz)
+    if pad:
+        a = jnp.pad(a, ((0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, pad), (0, 0)))
+    out = mcim_fold_mul(a, b, ct=ct, tile_b=tile, schedule=schedule,
+                        interpret=INTERPRET)
+    return out[:bsz] if pad else out
 
 
 def vmem_bytes_per_step(la: int, lb: int, ct: int, tile_b: int,
@@ -42,8 +68,20 @@ def vmem_bytes_per_step(la: int, lb: int, ct: int, tile_b: int,
 
     Used by benchmarks to show the 1/CT footprint fold, the TPU analogue
     of the paper's silicon-area saving.  The FF schedule keeps the full
-    register file live, so only its B-chunk input folds with CT.
+    register file live, so only its B-chunk input folds with CT.  The
+    folded Karatsuba schedule keeps one half-width (hp = n/2+1) PPM port
+    pair plus the full-product compressor accumulator live per cycle --
+    its saving is vs the *spatial* Karatsuba (three PPM windows at
+    once), not vs Star.
     """
+    if schedule == "karatsuba":
+        n = max(la, lb)
+        n += n % 2
+        hp = n // 2 + 1
+        words = tile_b * (2 * hp        # this cycle's operand port pair
+                          + 2 * hp      # shared PPM window (T_j columns)
+                          + 2 * n)      # compressor feedback accumulator
+        return words * 4
     chunk = -(-lb // ct)
     acc = (la + ct * chunk + 1) if schedule == "ff" else (la + chunk + 1)
     words = tile_b * (la              # A tile

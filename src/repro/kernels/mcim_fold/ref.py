@@ -1,14 +1,20 @@
-"""Pure-jnp oracle for the mcim_fold kernel: the core FB/FF multipliers."""
+"""Pure-jnp oracle for the mcim_fold kernel: the core folded multipliers."""
 import jax
 
 from repro.core.schoolbook import feedback_mul, feedforward_mul
+from repro.core.karatsuba import karatsuba_mul
 
 
 def mcim_fold_mul_ref(a: jax.Array, b: jax.Array, *, ct: int = 2,
                       schedule: str = "fb") -> jax.Array:
-    """(B, LA) x (B, LB) -> (B, LA+LB) limbs, FB or FF architecture."""
+    """(B, LA) x (B, LB) -> (B, LA+LB) limbs, FB / FF / folded-Karatsuba."""
     if schedule == "fb":
         return feedback_mul(a, b, ct=ct)
     if schedule == "ff":
         return feedforward_mul(a, b, ct=ct)
-    raise ValueError(f"schedule must be fb or ff, got {schedule!r}")
+    if schedule == "karatsuba":
+        # the kernel realizes one folded Karatsuba level over CT=3 with
+        # schoolbook sub-PPMs, i.e. the paper's Karat-1 design
+        return karatsuba_mul(a, b, levels=1, ct=ct)
+    raise ValueError(
+        f"schedule must be fb, ff or karatsuba, got {schedule!r}")

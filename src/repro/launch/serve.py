@@ -40,43 +40,86 @@ class ServeEngine:
         self.live = np.zeros((slots,), bool)
         self.outputs = {}          # request_id -> generated tokens
         self.request_of_slot = [-1] * slots
+        self._cache_batch_axes = None
         self._decode = jax.jit(
             lambda p, c, t, pos: model.decode_step(p, c, t, pos, mesh),
             donate_argnums=(1,))
 
     def admit(self, request_id: int, prompt: np.ndarray) -> None:
-        slot = int(np.argmin(self.live))
-        assert not self.live[slot]
-        # prefill this slot (batch-1 prefill; production would batch these)
-        caches, logits = self.model.prefill(
-            self.params, {"tokens": jnp.asarray(prompt[None])},
-            self.mesh, s_cap=self.s_cap)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        if self.caches is None:
-            self.caches = self._alloc_like(caches)
-        self._write_slot(slot, caches)
-        self.pos = self.pos.at[slot].set(prompt.shape[0])
-        self.cur = self.cur.at[slot].set(tok[0])
-        self.live[slot] = True
-        self.request_of_slot[slot] = request_id
-        self.outputs[request_id] = [int(tok[0])]
+        self.admit_many([(request_id, prompt)])
+
+    def admit_many(self, requests) -> None:
+        """Admit ``[(request_id, prompt)]`` into free slots.
+
+        Requests with equal prompt lengths prefill as ONE batched model
+        call: with >= 2 slots free a burst of arrivals costs a single
+        prefill instead of one per request (ragged lengths fall back to
+        one call per length group).
+        """
+        if not requests:
+            return
+        free = [int(s) for s in np.flatnonzero(~self.live)]
+        if len(requests) > len(free):
+            raise ValueError(
+                f"admitting {len(requests)} requests with {len(free)} "
+                f"free slots")
+        by_len = {}
+        for rid, prompt in requests:
+            by_len.setdefault(prompt.shape[0], []).append((rid, prompt))
+        for plen, group in by_len.items():
+            slots = [free.pop(0) for _ in group]
+            tokens = jnp.asarray(np.stack([p for _, p in group]))
+            caches, logits = self.model.prefill(
+                self.params, {"tokens": tokens}, self.mesh,
+                s_cap=self.s_cap)
+            toks = jnp.argmax(logits, -1).astype(jnp.int32)
+            if self.caches is None:
+                self.caches = self._alloc_like(caches)
+            for row, (slot, (rid, _)) in enumerate(zip(slots, group)):
+                self._write_slot(slot, caches, row=row, rows=len(group))
+                self.pos = self.pos.at[slot].set(plen)
+                self.cur = self.cur.at[slot].set(toks[row])
+                self.live[slot] = True
+                self.request_of_slot[slot] = rid
+                self.outputs[rid] = [int(toks[row])]
 
     def _alloc_like(self, caches_b1):
         spec = self.model.cache_spec(self.slots, self.s_cap)
         return jax.tree_util.tree_map(
             lambda s: jnp.zeros(s.shape, s.dtype), spec)
 
-    def _write_slot(self, slot: int, caches_b1):
-        def put(full, one):
-            # batch axis = axis where full.shape == slots and one.shape == 1
-            for ax in range(full.ndim):
-                if full.shape[ax] == self.slots and one.shape[ax] == 1 \
-                        and full.shape[:ax] == one.shape[:ax]:
-                    idx = [slice(None)] * full.ndim
-                    idx[ax] = slice(slot, slot + 1)
-                    return full.at[tuple(idx)].set(one)
-            raise ValueError((full.shape, one.shape))
-        self.caches = jax.tree_util.tree_map(put, self.caches, caches_b1)
+    def _batch_axes(self):
+        """Per-cache-leaf batch axis, derived from the model's cache spec:
+        the axis whose size tracks the spec's batch argument.  Shape
+        matching cannot disambiguate (a stacked layer-group dim can equal
+        the slot count); asking the spec can."""
+        if self._cache_batch_axes is None:
+            s1 = jax.tree_util.tree_leaves(
+                self.model.cache_spec(self.slots, self.s_cap))
+            s2 = jax.tree_util.tree_leaves(
+                self.model.cache_spec(self.slots + 1, self.s_cap))
+            axes = []
+            for l1, l2 in zip(s1, s2):
+                diff = [ax for ax in range(len(l1.shape))
+                        if l1.shape[ax] != l2.shape[ax]]
+                assert len(diff) == 1, (l1.shape, l2.shape)
+                axes.append(diff[0])
+            self._cache_batch_axes = axes
+        return self._cache_batch_axes
+
+    def _write_slot(self, slot: int, caches_br, row: int = 0,
+                    rows: int = 1):
+        axes = iter(self._batch_axes())     # tree_map runs in leaf order
+
+        def put(full, batched):
+            ax = next(axes)
+            assert full.shape[ax] == self.slots and batched.shape[ax] == rows
+            idx = [slice(None)] * full.ndim
+            idx[ax] = slice(slot, slot + 1)
+            src = [slice(None)] * batched.ndim
+            src[ax] = slice(row, row + 1)
+            return full.at[tuple(idx)].set(batched[tuple(src)])
+        self.caches = jax.tree_util.tree_map(put, self.caches, caches_br)
 
     def step(self) -> None:
         self.caches, logits = self._decode(self.params, self.caches,
@@ -119,11 +162,15 @@ def main(argv=None):
     done = 0
     new_counts = {}
     while done < args.requests:
-        # admit while slots are free
-        while next_req < args.requests and not self_full(eng):
-            eng.admit(next_req, prompts[next_req])
+        # admit all pending requests that fit into free slots at once:
+        # they share one batched prefill instead of a model call each
+        n_free = int(eng.slots - eng.live.sum())
+        pending = []
+        while next_req < args.requests and len(pending) < n_free:
+            pending.append((next_req, prompts[next_req]))
             new_counts[next_req] = 0
             next_req += 1
+        eng.admit_many(pending)
         eng.step()
         for slot in range(args.slots):
             rid = eng.request_of_slot[slot]
@@ -137,10 +184,6 @@ def main(argv=None):
     print(f"[serve] {args.requests} requests, {total_tokens} tokens "
           f"in {dt:.1f}s ({total_tokens/dt:.1f} tok/s)")
     return eng.outputs
-
-
-def self_full(eng: ServeEngine) -> bool:
-    return bool(eng.live.all())
 
 
 if __name__ == "__main__":

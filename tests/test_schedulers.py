@@ -1,0 +1,85 @@
+"""Property tests for the bank scheduler layer (pure Python, no jax).
+
+Every policy must honour the same static contract -- a complete,
+duplicate-free assignment of all ops -- and greedy's
+earliest-completion-time dispatch must never lose to round-robin on
+makespan (it is provably optimal for identical ops: the k-th op on an
+instance of cycle time ct can finish no earlier than k*ct, and greedy
+consumes exactly the n smallest such completion slots)."""
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bank import schedule as S
+
+CTS = st.lists(st.integers(min_value=1, max_value=8),
+               min_size=1, max_size=6).map(tuple)
+N_OPS = st.integers(min_value=0, max_value=80)
+
+
+def _check_contract(assign, makespan, cts, n_ops):
+    assert len(assign) == len(cts)
+    flat = [op for ops in assign for op in ops]
+    assert sorted(flat) == list(range(n_ops)), "incomplete or duplicated"
+    assert makespan >= 0
+    if n_ops:
+        # no instance can beat its own issue interval over its ops
+        assert makespan >= max(
+            (len(ops) - 1) * ct + ct
+            for ops, ct in zip(assign, cts) if ops)
+    else:
+        assert makespan == 0
+
+
+@settings(max_examples=200, deadline=None)
+@given(cts=CTS, n_ops=N_OPS)
+def test_all_schedulers_complete_and_duplicate_free(cts, n_ops):
+    for name in ("round_robin", "greedy", "streaming"):
+        assign, makespan = S.get_scheduler(name).schedule(cts, n_ops)
+        _check_contract(assign, makespan, cts, n_ops)
+
+
+@settings(max_examples=200, deadline=None)
+@given(cts=CTS, n_ops=N_OPS)
+def test_greedy_makespan_never_worse_than_round_robin(cts, n_ops):
+    _, rr = S.round_robin_schedule(cts, n_ops)
+    _, greedy = S.greedy_schedule(cts, n_ops)
+    assert greedy <= rr, (cts, n_ops, greedy, rr)
+
+
+@settings(max_examples=100, deadline=None)
+@given(cts=CTS, n_ops=N_OPS)
+def test_streaming_with_zero_arrivals_is_round_robin(cts, n_ops):
+    trace = (0,) * n_ops
+    assert S.streaming_schedule(cts, n_ops, trace) == \
+        S.round_robin_schedule(cts, n_ops)
+
+
+@settings(max_examples=100, deadline=None)
+@given(cts=CTS, n_ops=st.integers(min_value=1, max_value=60),
+       rate=st.integers(min_value=1, max_value=8))
+def test_streaming_respects_arrival_trace(cts, n_ops, rate):
+    """No op may issue before it arrives: with ops trickling in at
+    ``rate``/cycle the makespan is at least the last arrival + its CT."""
+    trace = S.uniform_arrivals(n_ops, rate)
+    assign, makespan = S.streaming_schedule(cts, n_ops, trace)
+    _check_contract(assign, makespan, cts, n_ops)
+    assert makespan >= trace[-1] + min(cts)
+
+
+def test_streaming_rejects_bad_traces():
+    with pytest.raises(ValueError):
+        S.streaming_schedule((1, 2), 3, (0, 1))        # wrong length
+    with pytest.raises(ValueError):
+        S.streaming_schedule((1, 2), 3, (2, 1, 0))     # decreasing
+
+
+def test_registry_round_trip():
+    assert S.get_scheduler("greedy") is S.SCHEDULERS["greedy"]
+    custom = S.StreamingScheduler(arrival_rate=2)
+    assert S.get_scheduler(custom) is custom
+    with pytest.raises(ValueError):
+        S.get_scheduler("nope")
+    with pytest.raises(TypeError):
+        S.get_scheduler(42)

@@ -1,0 +1,128 @@
+"""Sharded multi-bank execution on a 2-device placeholder mesh
+(subprocess, like test_distributed_features): ``sharded_execute`` must
+be bit-exact vs the Python-bigint oracle and vs the single-bank engine,
+for core and kernel backends and both batch-available schedulers.  Also
+pins the backend-registry acceptance: the kernel capability routes every
+planner arch (star, fb, ff, karatsuba CT=3) through Pallas with no core
+fallback."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import planner
+from repro.core.bank import backends as B
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+from fractions import Fraction
+import numpy as np
+import jax, jax.numpy as jnp
+
+from repro.core import limbs as L
+from repro.core import planner, bank
+
+assert len(jax.devices()) == 2
+mesh = jax.make_mesh((2,), ("data",))
+rng = np.random.default_rng(5)
+
+# TP=7/2 (star+fb), TP=5/6 at 128b (fb+karatsuba), strict 1/2 (ff)
+cases = [
+    (planner.plan_throughput(32, 32, Fraction(7, 2)), 32),
+    (planner.plan_throughput(128, 128, Fraction(5, 6)), 128),
+    (planner.plan_throughput(64, 64, Fraction(1, 2), strict_timing=True),
+     64),
+]
+for plan, bits in cases:
+    a = jnp.asarray(L.random_limbs(rng, (28,), bits))
+    b = jnp.asarray(L.random_limbs(rng, (28,), bits))
+    expect = [L.from_limbs(np.asarray(x)) * L.from_limbs(np.asarray(y))
+              for x, y in zip(a, b)]
+    for backend in ("core", "kernel"):
+        for sched in ("round_robin", "greedy"):
+            out = bank.sharded_execute(plan, a, b, mesh, "data",
+                                       backend=backend, scheduler=sched)
+            assert L.batch_from_limbs(np.asarray(out)) == expect, \
+                (plan.describe(), backend, sched)
+            single = bank.execute(plan, a, b, backend=backend,
+                                  scheduler=sched)
+            assert np.array_equal(np.asarray(out), np.asarray(single))
+print("OK sharded-exact")
+
+# the output really is sharded along the axis
+plan, bits = cases[0]
+a = jnp.asarray(L.random_limbs(rng, (28,), bits))
+b = jnp.asarray(L.random_limbs(rng, (28,), bits))
+out = bank.sharded_execute(plan, a, b, mesh, "data")
+[spec] = {s.spec for s in [out.sharding]}
+assert spec[0] == "data", spec
+print("OK sharded-layout")
+
+# per-replica accounting: each bank replica sees B/N ops
+rep = bank.sharded_report(plan, 28, bits, bits, mesh, "data")
+assert rep.batch == 14
+assert sum(ir.n_ops for ir in rep.instances) == 14
+print("OK sharded-report")
+
+# divisibility and axis guards
+try:
+    bank.sharded_execute(plan, a[:27], b[:27], mesh, "data")
+    raise AssertionError("ragged batch accepted")
+except ValueError:
+    pass
+try:
+    bank.sharded_execute(plan, a, b, mesh, "model")
+    raise AssertionError("unknown axis accepted")
+except ValueError:
+    pass
+print("OK sharded-guards")
+print("ALLOK")
+"""
+
+
+def test_sharded_bank_bit_exact_two_devices():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "ALLOK" in out.stdout, out.stdout
+
+
+# ---------------------------------------------------- backend registry
+
+def test_kernel_capability_has_no_core_fallback():
+    """Every planner arch resolves to a Pallas big_mul partial under the
+    kernel capability -- the PR-2 Karatsuba core fallback is gone."""
+    from repro.kernels.mcim_fold.ops import big_mul
+    from repro.core.mcim import MCIMConfig
+    for arch, cfg in [
+            ("star", MCIMConfig(arch="star", ct=1)),
+            ("fb", MCIMConfig(arch="fb", ct=2)),
+            ("ff", MCIMConfig(arch="ff", ct=2)),
+            ("karatsuba", MCIMConfig(arch="karatsuba", ct=3))]:
+        be = B.get_backend(arch, "kernel")
+        mul = be.make_mul(cfg, 8, 8)
+        assert getattr(mul, "func", None) is big_mul, (arch, mul)
+    kw = B.get_backend("karatsuba", "kernel").make_mul(
+        MCIMConfig(arch="karatsuba", ct=3), 8, 8).keywords
+    assert kw == {"ct": 3, "schedule": "karatsuba"}
+
+
+def test_every_planner_arch_has_both_capabilities():
+    keys = B.registered_backends()
+    for arch in ("star", "fb", "ff", "karatsuba"):
+        for cap in B.CAPABILITIES:
+            assert (arch, cap) in keys
+    with pytest.raises(ValueError):
+        B.get_backend("star", "fpga")
+
+
+def test_unknown_backend_capability_rejected_by_bank():
+    from repro.core.bank import Bank
+    plan = planner.plan_throughput(32, 32, 1)
+    with pytest.raises(ValueError):
+        Bank(plan, 32, 32, backend="fpga")
