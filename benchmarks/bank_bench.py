@@ -14,6 +14,11 @@ execute a batch through ``core.bank``, and record
     round-up-to-integer Star bank,
   * the planner's ASIC-area estimate vs the conventional Star bank.
 
+Every design is constructed through the ``repro.designs`` facade, and
+each emitted row embeds its serialized ``DesignSpec`` so the BENCH
+artifact carries full, recompilable provenance
+(``DesignSpec.from_dict(row["design_spec"])`` -> the same design).
+
 Emits ``BENCH_bank.json`` (repo root, override with --out) and the
 harness CSV rows.  ``--smoke`` runs a 6-point subset for CI.
 """
@@ -30,6 +35,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import designs
 from repro.core import limbs as L
 from repro.core import planner, bank
 from repro.kernels.mcim_fold import vmem_bytes_per_step
@@ -56,8 +62,9 @@ def _row(name, us, derived):
 
 
 def run_design_point(bits: int, tp: Fraction, batch_mult: int = 4) -> dict:
-    plan = planner.plan_throughput(bits, bits, tp)
-    bk = bank.Bank(plan, bits, bits)
+    spec = designs.DesignSpec(bits, bits, tp, backend="core")
+    design = designs.generate(spec)
+    plan, bk = design.plan, design.bank
     batch = batch_mult * max(tp.numerator, 1)
 
     a = jnp.asarray(L.random_limbs(RNG, (batch,), bits))
@@ -92,7 +99,11 @@ def run_design_point(bits: int, tp: Fraction, batch_mult: int = 4) -> dict:
     return {
         "bits": bits,
         "tp": str(tp),
+        "design_spec": spec.to_dict(),   # recompilable provenance
+        "backend": design.bank.backend,
         "plan": plan.describe(),
+        "latency_cycles": design.latency_cycles,
+        "fmax_estimate_ghz": design.fmax_estimate,
         "instances": [
             {"arch": ir.config.arch, "ct": ir.ct, "n_ops": ir.n_ops,
              "busy_cycles": ir.busy_cycles}

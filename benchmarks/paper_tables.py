@@ -10,7 +10,9 @@ core.timing_model (calibrated only on Star stress anchors).
 from __future__ import annotations
 
 import time
+from fractions import Fraction
 
+from repro import designs
 from repro.core import area_model as am
 from repro.core import timing_model as tm
 from repro.core.mcim import MCIMConfig
@@ -123,7 +125,9 @@ def table7_ct_sweep():
 
 
 def table8_best_designs():
-    """Table VIII: best design per width/timing; planner must agree."""
+    """Table VIII: best design per width/timing via the designs facade
+    (generate() applies the timing filter); planner must agree with the
+    paper's pick."""
     rows = [
         (8, 0.57, False, "fb", 0.19),
         (16, 0.31, True, "ff", 0.23),
@@ -134,8 +138,12 @@ def table8_best_designs():
     ]
     for bits, tgt, strict, paper_arch, paper_sav in rows:
         ct = 3 if paper_arch == "karatsuba" else 2
-        pick = planner.best_single(bits, bits, ct, strict_timing=strict)
-        ours = _area(bits, pick, tgt if strict else None)
+        spec = designs.DesignSpec(bits, bits, Fraction(1, ct),
+                                  clock_ns=tgt if strict else None,
+                                  strict_timing=strict, backend="core")
+        design = designs.generate(spec)
+        (_, pick), = design.plan.configs
+        ours = design.area
         star = _star(bits, tgt if strict else None)
         sav = 1 - ours / star
         agree = pick.arch == paper_arch
@@ -173,12 +181,12 @@ def table10_fpga_luts():
 
 def use_case_fractional_tp():
     """Sec. V-E use case 1: TP=3.5 bank vs 4x Star (the paper's headline
-    deployment story)."""
-    plan = planner.plan_throughput(32, 32, 3.5)
+    deployment story), via the registered design point."""
+    design = designs.generate("tp3p5_w32")
     conv = planner.star_bank_area(32, 32, 3.5)
     _row("usecase.tp3_5",
-         f"plan=[{plan.describe()}] conventional={conv:.0f}um2 "
-         f"savings={1 - plan.area / conv:.0%}")
+         f"plan=[{design.plan.describe()}] conventional={conv:.0f}um2 "
+         f"savings={1 - design.area / conv:.0%}")
 
 
 ALL = [table2_16x16_relaxed, table3_128x128_relaxed, table4_16x16_strict,

@@ -1,13 +1,13 @@
 """Fractional throughput, executed: the paper's TP=3.5 use case (Sec. V-E).
 
 An application needs 3.5 multiplications per cycle.  The conventional
-bank rounds up to 4 Star multipliers; the planner instead picks 3 Star
-+ one CT=2 folded MCIM.  This demo builds that plan, *runs* it through
-the bank execution engine on a real batch, and shows that
+bank rounds up to 4 Star multipliers; ``designs.generate`` instead
+compiles 3 Star + one CT=2 folded MCIM from one declarative spec.  This
+demo *runs* that design on a real batch and shows that
 
   * the results are bit-exact vs Python's bigints,
   * the round-robin schedule sustains exactly 3.5 ops/cycle,
-  * the bank costs less area (ASIC model) and VMEM (TPU analogue)
+  * the design costs less area (ASIC model) and VMEM (TPU analogue)
     than the 4x Star bank.
 
   PYTHONPATH=src python examples/fractional_throughput.py
@@ -15,6 +15,7 @@ the bank execution engine on a real batch, and shows that
 import numpy as np
 import jax.numpy as jnp
 
+from repro import designs
 from repro.core import limbs as L
 from repro.core import planner, bank
 
@@ -24,34 +25,32 @@ BATCH = 56                      # 16 hyperperiods of 7 ops / 2 cycles
 
 
 def main():
-    plan = planner.plan_throughput(BITS, BITS, TP)
-    print(f"plan: {plan.describe()}")
+    design = designs.generate(designs.DesignSpec(BITS, BITS, TP))
+    print(f"design: {design.describe()}")
 
-    bk = bank.Bank(plan, BITS, BITS)
     rng = np.random.default_rng(0)
     a = jnp.asarray(L.random_limbs(rng, (BATCH,), BITS))
     b = jnp.asarray(L.random_limbs(rng, (BATCH,), BITS))
 
-    out = bk.execute(a, b)
+    out = design.mul(a, b)
     got = L.batch_from_limbs(np.asarray(out))
     expect = [L.from_limbs(np.asarray(x)) * L.from_limbs(np.asarray(y))
               for x, y in zip(a, b)]
     print(f"bit-exact over {BATCH} ops: {got == expect}")
 
-    rep = bk.last_report
+    rep = design.report(BATCH)
     print(f"\nschedule: {BATCH} ops in {rep.cycles} cycles "
           f"-> {rep.measured_throughput} ops/cycle "
-          f"(plan claims {rep.plan_throughput}, "
+          f"(design claims {design.throughput}, "
           f"utilization {rep.utilization:.3f})")
     for i, ir in enumerate(rep.instances):
         print(f"  instance {i}: {ir.config.arch}(ct={ir.ct})  "
               f"{ir.n_ops} ops, busy {ir.busy_cycles} cycles")
 
-    # pluggable dispatch: same bank, three scheduling policies
-    cts = tuple(cfg.ct for cfg in bk.instances)
+    # pluggable dispatch: same design, three scheduling policies
     print("\nscheduler makespans for this batch:")
     for name in ("round_robin", "greedy", "streaming"):
-        _, makespan = bank.get_scheduler(name).schedule(cts, BATCH)
+        makespan = design.bank.report(BATCH, scheduler=name).cycles
         print(f"  {name:12s} {makespan} cycles")
     _, tail = bank.greedy_schedule((1, 3), 2)
     _, tail_rr = bank.round_robin_schedule((1, 3), 2)
@@ -59,12 +58,12 @@ def main():
           f"round_robin={tail_rr}, greedy={tail})")
 
     conv_area = planner.star_bank_area(BITS, BITS, TP)
-    print(f"\narea: bank {plan.area:.0f}um2 vs 4x Star {conv_area:.0f}um2 "
-          f"-> saves {1 - plan.area / conv_area:.0%}")
+    print(f"\narea: design {design.area:.0f}um2 vs 4x Star "
+          f"{conv_area:.0f}um2 -> saves {1 - design.area / conv_area:.0%}")
     from repro.kernels.mcim_fold import vmem_bytes_per_step
     la = L.n_limbs_for_bits(BITS)
-    star_ws = 4 * vmem_bytes_per_step(la, la, 1, bk.tile_b)
-    print(f"vmem: bank {rep.working_set_bytes} B vs 4x Star {star_ws} B "
+    star_ws = 4 * vmem_bytes_per_step(la, la, 1, design.bank.tile_b)
+    print(f"vmem: design {rep.working_set_bytes} B vs 4x Star {star_ws} B "
           f"-> saves {1 - rep.working_set_bytes / star_ws:.0%}")
 
 

@@ -1,41 +1,51 @@
-"""Quickstart: the paper's folded multipliers as a JAX library.
+"""Quickstart: the paper's design generator as a JAX library.
+
+One declarative ``DesignSpec`` -- throughput, clock target, latency
+budget, signedness -- compiles into an executable ``CompiledDesign``
+via ``repro.designs.generate``.  No planner/bank hand-wiring.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-import jax.numpy as jnp
+from fractions import Fraction
 
-from repro.core import limbs as L
-from repro.core import MCIMConfig, mcim_mul, planner, area_model
+from repro import designs
 
 
 def main():
-    # -- multiply two 128-bit integers with every architecture ----------
-    a_int = 0xDEADBEEF_CAFEBABE_01234567_89ABCDEF
-    b_int = 0xFEEDFACE_8BADF00D_00C0FFEE_DEADC0DE
-    a = jnp.asarray(L.to_limbs(a_int, 8))[None]
-    b = jnp.asarray(L.to_limbs(b_int, 8))[None]
-    expect = a_int * b_int
-    for cfg in [MCIMConfig(arch="star", ct=1),
-                MCIMConfig(arch="fb", ct=2),
-                MCIMConfig(arch="fb", ct=4),
-                MCIMConfig(arch="ff", ct=2),
-                MCIMConfig(arch="karatsuba", ct=3, levels=2)]:
-        out = L.from_limbs(np.asarray(mcim_mul(a, b, cfg))[0])
-        status = "OK " if out == expect else "FAIL"
-        print(f"{status} {cfg.arch:10s} ct={cfg.ct} -> 0x{out:064x}")
+    # -- multiply two 128-bit integers through generated designs ---------
+    a = 0xDEADBEEF_CAFEBABE_01234567_89ABCDEF
+    b = 0xFEEDFACE_8BADF00D_00C0FFEE_DEADC0DE
+    print("one 128x128 multiply per throughput point:")
+    for tp in (1, Fraction(1, 2), Fraction(1, 3)):
+        d = designs.generate(designs.DesignSpec(128, 128, tp))
+        ok = "OK " if d.mul(a, b) == a * b else "FAIL"
+        print(f"  {ok} TP={tp!s:4} -> {d.plan.describe()}")
 
-    # -- the paper's area story ------------------------------------------
-    print("\nArea savings vs Star (32x32, FB architecture, Table VII):")
-    for ct in (2, 3, 4, 8):
-        s = area_model.savings_vs_star(32, 32, MCIMConfig(arch="fb", ct=ct))
-        print(f"  CT={ct}: TP=1/{ct}, saves {s:.0%} silicon")
+    # -- clock-frequency customization (the paper's strict tables) -------
+    # a 0.31 ns target rejects the feedback-loop design the relaxed
+    # planner would pick; generate() falls back per timing_model
+    relaxed = designs.generate(designs.DesignSpec(32, 32, Fraction(1, 3)))
+    tight = designs.generate(
+        designs.DesignSpec(32, 32, Fraction(1, 3), clock_ns=0.31))
+    print(f"\nrelaxed pick : {relaxed.plan.describe()}")
+    print(f"0.31ns pick  : {tight.plan.describe()} "
+          f"(fallback={tight.timing_fallback})")
+    print(f"  latency {tight.latency_cycles} cycles, "
+          f"fmax ~{tight.fmax_estimate:.2f} GHz, "
+          f"area {tight.area:.0f} um2 (incl. synthesis stress)")
 
     # -- fractional-throughput planning (use case 1, Sec. V-E) -----------
-    plan = planner.plan_throughput(32, 32, 3.5)
+    d = designs.generate("tp3p5_w32")          # pre-registered point
+    from repro.core import planner
     conv = planner.star_bank_area(32, 32, 3.5)
-    print(f"\nTP=3.5 multipliers/cycle: {plan.describe()}")
-    print(f"  vs conventional 4x Star bank: saves {1 - plan.area/conv:.0%}")
+    print(f"\nTP=3.5 multipliers/cycle: {d.plan.describe()}")
+    print(f"  vs conventional 4x Star bank: saves {1 - d.area / conv:.0%}")
+
+    # -- lossless provenance ---------------------------------------------
+    blob = d.to_json()
+    again = designs.generate(designs.DesignSpec.from_json(blob))
+    print(f"\nspec json round-trip recompiles bit-exactly: "
+          f"{again.mul(a % 2**32, b % 2**32) == d.mul(a % 2**32, b % 2**32)}")
 
 
 if __name__ == "__main__":

@@ -6,11 +6,12 @@ from repro.launch.serve import main as serve_main
 
 
 def main():
-    outputs = serve_main(["--arch", "gemma3-1b", "--smoke",
-                          "--requests", "6", "--slots", "2",
-                          "--prompt-len", "16", "--max-new", "8"])
-    assert len(outputs) == 6
-    assert all(len(toks) >= 8 for toks in outputs.values())
+    eng = serve_main(["--arch", "gemma3-1b", "--smoke",
+                      "--requests", "6", "--slots", "2",
+                      "--prompt-len", "16", "--max-new", "8"])
+    assert len(eng.outputs) == 6
+    assert all(len(toks) >= 8 for toks in eng.outputs.values())
+    assert len(eng.arrival_trace()) == 6
 
 
 if __name__ == "__main__":

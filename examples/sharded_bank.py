@@ -2,11 +2,12 @@
 
 The paper's Sec. V-E bank sustains 3.5 multiplications/cycle on one
 chip.  Production serving replicates it: this demo forces a 2-device
-CPU mesh, runs ``bank.sharded_execute`` so each device executes one
-full bank replica on half the batch, and shows that
+CPU mesh and compiles ONE ``DesignSpec`` with ``replicas=2`` -- the
+facade routes ``mul`` through ``bank.sharded_execute`` so each device
+executes one full bank replica on half the batch -- and shows that
 
   * the gathered results are bit-exact vs Python's bigints (and vs the
-    single-bank engine),
+    single-replica design),
   * the output really lives sharded along the mesh axis,
   * the aggregate throughput is N_devices x the per-replica rate
     (2 x 3.5 = 7 ops/cycle here),
@@ -14,6 +15,7 @@ full bank replica on half the batch, and shows that
 
   PYTHONPATH=src python examples/sharded_bank.py
 """
+import dataclasses
 import os
 
 # must be set before the first jax init: fake 2 CPU devices
@@ -23,8 +25,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import designs
 from repro.core import limbs as L
-from repro.core import planner, bank
 
 BITS = 32
 TP = 3.5
@@ -32,38 +34,39 @@ BATCH = 56                      # 28 ops per device = 8 hyperperiods each
 
 
 def main():
-    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
-    n_dev = mesh.shape["data"]
-    plan = planner.plan_throughput(BITS, BITS, TP)
-    print(f"mesh: {n_dev} devices over axis 'data'")
-    print(f"plan per replica: {plan.describe()}")
+    n_dev = len(jax.devices())
+    spec = designs.DesignSpec(BITS, BITS, TP, replicas=n_dev,
+                              mesh_axis="data")
+    design = designs.generate(spec)
+    print(f"mesh: {n_dev} devices over axis {spec.mesh_axis!r}")
+    print(f"design: {design.describe()}")
 
     rng = np.random.default_rng(0)
     a = jnp.asarray(L.random_limbs(rng, (BATCH,), BITS))
     b = jnp.asarray(L.random_limbs(rng, (BATCH,), BITS))
 
-    out = bank.sharded_execute(plan, a, b, mesh, "data")
+    out = design.mul(a, b)
     got = L.batch_from_limbs(np.asarray(out))
     expect = [L.from_limbs(np.asarray(x)) * L.from_limbs(np.asarray(y))
               for x, y in zip(a, b)]
-    single = bank.execute(plan, a, b)
+    single = designs.generate(
+        dataclasses.replace(spec, replicas=1)).mul(a, b)
     print(f"\nbit-exact over {BATCH} ops: {got == expect}")
-    print(f"identical to the single-bank engine: "
+    print(f"identical to the single-replica design: "
           f"{np.array_equal(np.asarray(out), np.asarray(single))}")
     print(f"output sharding spec: {out.sharding.spec}")
 
-    rep = bank.sharded_report(plan, BATCH, BITS, BITS, mesh, "data")
-    agg = n_dev * rep.measured_throughput
+    rep = design.report(BATCH)          # per-replica accounting
     print(f"\nper replica: {rep.batch} ops in {rep.cycles} cycles "
           f"-> {rep.measured_throughput} ops/cycle")
-    print(f"aggregate: {n_dev} replicas -> {agg} ops/cycle "
+    print(f"aggregate: {n_dev} replicas -> "
+          f"{design.throughput} ops/cycle "
           f"(plan claims {n_dev} x {rep.plan_throughput})")
 
     # policy comparison on one replica's shard
     local = BATCH // n_dev
-    cts = tuple(cfg.ct for count, cfg in plan.configs for _ in range(count))
-    _, rr = bank.round_robin_schedule(cts, local)
-    _, greedy = bank.greedy_schedule(cts, local)
+    rr = design.bank.report(local, scheduler="round_robin").cycles
+    greedy = design.bank.report(local, scheduler="greedy").cycles
     print(f"\nscheduler makespans on a {local}-op shard: "
           f"round_robin={rr}, greedy={greedy} (greedy never loses)")
 

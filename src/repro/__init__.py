@@ -2,8 +2,14 @@
 JAX framework -- core arithmetic, Pallas kernels, a 10-arch model zoo,
 and a multi-pod training/serving runtime.
 
+The front door is :mod:`repro.designs`: a declarative ``DesignSpec``
+(throughput / clock / latency / signedness / replication) compiled by
+``designs.generate()`` into an executable ``CompiledDesign``.  The
+underlying layers (``repro.core``, ``repro.kernels``, ``repro.launch``)
+remain public.
+
 Reproduction of: Houraniah, Ugurdag, Dedeagac, "Efficient Multi-Cycle
 Folded Integer Multipliers" (2023), adapted from ASIC folding to TPU
 temporal folding (see DESIGN.md).
 """
-__version__ = "1.0.0"
+__version__ = "1.1.0"

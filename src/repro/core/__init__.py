@@ -1,12 +1,17 @@
 """Core MCIM library: multi-cycle folded integer multipliers in JAX.
 
-Public API:
+Most callers should start one level up, at :mod:`repro.designs`: a
+declarative ``DesignSpec`` compiled by ``generate()`` wires planner,
+timing model, bank and sharding together.  The layers below stay public
+for direct use:
+
   limbs            -- limb representation + PPM / compressor / final adders
   mcim_mul         -- configurable folded multiply (fb/ff/karatsuba/star)
   MCIMConfig       -- generator parameters (arch, ct, levels, adder, signed)
   make_multiplier  -- jitted fixed-width multiplier factory
   mul32x32_64      -- 32x32->64 multiply on uint32 lanes (for RNG / exact)
   planner          -- design-point selection (paper Table VIII policy)
+  timing_model     -- clock/latency model filtering that selection
   bank             -- executable multiplier banks for planner Plans
                       (pluggable schedulers/backends + sharded execution)
   area_model       -- ASIC-area cost model used by benchmarks/

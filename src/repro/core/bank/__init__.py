@@ -20,7 +20,10 @@ The PR-2 ``core/bank.py`` monolith is now three decoupled layers:
 This package is a drop-in replacement for the old module:
 ``from repro.core import bank`` and every public PR-2 name
 (``Bank``, ``BankReport``, ``execute``, ``last_report``,
-``round_robin_schedule``, ``BACKENDS``) keep working.
+``round_robin_schedule``, ``BACKENDS``) keep working.  New code should
+usually not construct ``Bank`` objects directly: :mod:`repro.designs`
+compiles a declarative ``DesignSpec`` into a ``CompiledDesign`` that
+owns the bank plus timing/area/provenance.
 """
 from .schedule import (Scheduler, RoundRobinScheduler, GreedyScheduler,
                        StreamingScheduler, SCHEDULERS, register_scheduler,

@@ -115,8 +115,13 @@ class Bank:
         self.last_report = None
 
     # -------------------------------------------------------------- reports
-    def report(self, batch: int) -> BankReport:
-        assign, cycles = self.scheduler.schedule(self._cts, batch)
+    def report(self, batch: int, scheduler=None) -> BankReport:
+        """Cycle accounting for one batch.  ``scheduler`` overrides the
+        bank's policy for this report only (e.g. a StreamingScheduler
+        carrying a recorded arrival trace) without recompiling dispatch."""
+        sched = self.scheduler if scheduler is None else \
+            get_scheduler(scheduler)
+        assign, cycles = sched.schedule(self._cts, batch)
         insts = tuple(
             InstanceReport(cfg, len(ops), len(ops) * cfg.ct)
             for cfg, ops in zip(self.instances, assign))
@@ -125,7 +130,7 @@ class Bank:
         return BankReport(batch=batch, cycles=cycles, instances=insts,
                           plan_throughput=self.plan.throughput,
                           working_set_bytes=ws,
-                          scheduler=self.scheduler.name)
+                          scheduler=sched.name)
 
     # -------------------------------------------------------------- execute
     def dispatch_fn(self, batch: int):

@@ -17,6 +17,11 @@ from fractions import Fraction
 from .mcim import MCIMConfig
 from . import area_model
 
+#: Fractional TPs are quantized to this denominator bound (the largest
+#: CT combination the Sec. V-B planner explores).  repro.designs mirrors
+#: it so a DesignSpec's throughput always matches the plan it compiles.
+MAX_TP_DENOMINATOR = 12
+
 
 @dataclasses.dataclass(frozen=True)
 class Plan:
@@ -26,9 +31,16 @@ class Plan:
     area: float               # um^2 (area-model estimate)
 
     def describe(self) -> str:
-        parts = [f"{c}x {cfg.arch}(ct={cfg.ct}"
-                 + (f",K={cfg.levels}" if cfg.arch == "karatsuba" else "")
-                 + ")" for c, cfg in self.configs]
+        parts = []
+        for c, cfg in self.configs:
+            detail = [f"ct={cfg.ct}"]
+            if cfg.arch == "karatsuba":
+                detail.append(f"K={cfg.levels}")
+            if cfg.adder != "1ca":       # e.g. 3CA: a genuinely different
+                detail.append(cfg.adder)  # design, must not print as 1CA
+            if cfg.signed:
+                detail.append("signed")
+            parts.append(f"{c}x {cfg.arch}({','.join(detail)})")
         return " + ".join(parts) + f"  TP={self.throughput}  area={self.area:.0f}um2"
 
 
@@ -75,7 +87,7 @@ def plan_throughput(bits_a: int, bits_b: int, tp: Fraction | float,
     Paper use case 1: TP = i/j with i/j not an integer, e.g. 3.5 -> three
     Star multipliers + one CT=2 MCIM instead of four Stars.
     """
-    tp = Fraction(tp).limit_denominator(12)
+    tp = Fraction(tp).limit_denominator(MAX_TP_DENOMINATOR)
     n_full = math.floor(tp)
     frac = tp - n_full
     configs = []
@@ -103,5 +115,5 @@ def plan_throughput(bits_a: int, bits_b: int, tp: Fraction | float,
 
 def star_bank_area(bits_a: int, bits_b: int, tp: Fraction | float) -> float:
     """Area of the conventional round-up-to-integer Star bank."""
-    n = math.ceil(Fraction(tp).limit_denominator(12))
+    n = math.ceil(Fraction(tp).limit_denominator(MAX_TP_DENOMINATOR))
     return n * area_model.area_um2(bits_a, bits_b, MCIMConfig(arch="star", ct=1))

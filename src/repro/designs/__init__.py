@@ -1,0 +1,36 @@
+"""repro.designs: the one design-generator API (the repo's front door).
+
+The paper's deliverable is a design generator "offering customization in
+terms of throughput, latency, and clock frequency".  This package is
+that generator as a two-step facade:
+
+    from repro import designs
+
+    spec = designs.DesignSpec(32, 32, throughput=3.5)   # declarative
+    d = designs.generate(spec)                          # compiled
+    d.mul(a, b)             # jitted bank execution (or two Python ints)
+    d.area, d.latency_cycles, d.fmax_estimate, d.throughput
+    d.report(batch)         # cycle accounting
+    d.to_json()             # lossless provenance -> DesignSpec.from_json
+
+``generate`` owns everything callers used to hand-wire: planner
+selection filtered by the timing model (clock / latency customization),
+scheduler + backend resolution, bank construction, and sharded
+replication (``spec.replicas`` over ``spec.mesh_axis``).  Named design
+points -- the paper's Table VIII rows and the Sec. V-E use-case banks --
+are pre-registered: ``designs.generate("tp3p5_w32")``.
+
+The PR-2/PR-3 layers (``repro.core.planner``, ``repro.core.bank``,
+``repro.core.timing_model``) stay public for power users; new code
+should start here.
+"""
+from .spec import (DesignSpec, DesignError, TimingError, LatencyError,
+                   MAX_TP_DENOMINATOR)
+from .compile import CompiledDesign, generate
+from .registry import register, get, names, TABLE_VIII, USE_CASES
+
+__all__ = [
+    "DesignSpec", "CompiledDesign", "generate",
+    "DesignError", "TimingError", "LatencyError", "MAX_TP_DENOMINATOR",
+    "register", "get", "names", "TABLE_VIII", "USE_CASES",
+]

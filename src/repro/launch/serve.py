@@ -3,13 +3,19 @@
 A slot manager keeps ``--slots`` concurrent sequences in flight; requests
 (prompts) are admitted into free slots in arrival order, prefilled, then
 decoded one token per engine step across the whole batch.  Finished
-sequences free their slot immediately (continuous batching).  Optional
-``--quant int8`` routes the decode MLP matmuls through the MCIM int8
-kernel path for a weights-bandwidth cut -- the paper's folding trade
-applied to serving.
+sequences free their slot immediately (continuous batching), and bursts
+of same-length arrivals share ONE batched prefill call.
+
+Admissions are recorded as an *arrival trace* (``arrival_trace()``):
+the engine cycle each request entered the system, nondecreasing, which
+feeds the bank layer's streaming scheduler.  ``--mcim-design`` names a
+registered ``repro.designs`` point (default the paper's TP=3.5 bank);
+after serving, the trace is replayed through that compiled design so
+the run reports how the silicon bank would have dispatched the same
+request stream (the ROADMAP's end-to-end async-serving wiring).
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --smoke \
-      --requests 12 --slots 4 --max-new 16
+      --requests 12 --slots 4 --max-new 16 --mcim-design tp3p5_w32
 """
 from __future__ import annotations
 
@@ -40,6 +46,8 @@ class ServeEngine:
         self.live = np.zeros((slots,), bool)
         self.outputs = {}          # request_id -> generated tokens
         self.request_of_slot = [-1] * slots
+        self.cycle = 0             # engine steps taken (decode cycles)
+        self._arrivals = []        # (request_id, admission cycle)
         self._cache_batch_axes = None
         self._decode = jax.jit(
             lambda p, c, t, pos: model.decode_step(p, c, t, pos, mesh),
@@ -63,6 +71,10 @@ class ServeEngine:
             raise ValueError(
                 f"admitting {len(requests)} requests with {len(free)} "
                 f"free slots")
+        for rid, _ in requests:    # admission cycle, in arrival order;
+            # recorded only once capacity is confirmed, so a rejected
+            # burst that is retried later cannot corrupt the trace
+            self._arrivals.append((rid, self.cycle))
         by_len = {}
         for rid, prompt in requests:
             by_len.setdefault(prompt.shape[0], []).append((rid, prompt))
@@ -121,7 +133,19 @@ class ServeEngine:
             return full.at[tuple(idx)].set(batched[tuple(src)])
         self.caches = jax.tree_util.tree_map(put, self.caches, caches_br)
 
+    def arrival_trace(self) -> tuple:
+        """Admission cycles of every admitted request, in arrival order.
+
+        Nondecreasing by construction (``cycle`` only grows), so the
+        trace feeds straight into the bank layer's streaming scheduler:
+        ``StreamingScheduler(arrivals=eng.arrival_trace())`` -- or, via
+        the facade, ``designs.generate(name).replay(trace)`` -- dispatches
+        one work item per request at its real admission cycle.
+        """
+        return tuple(cycle for _, cycle in self._arrivals)
+
     def step(self) -> None:
+        self.cycle += 1
         self.caches, logits = self._decode(self.params, self.caches,
                                            self.cur, self.pos)
         nxt = jnp.argmax(logits, -1).astype(jnp.int32)
@@ -145,6 +169,9 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--mcim-design", default="tp3p5_w32",
+                    help="registered repro.designs name to replay the "
+                         "admission trace through ('none' to skip)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -183,7 +210,18 @@ def main(argv=None):
     total_tokens = sum(len(o) for o in eng.outputs.values())
     print(f"[serve] {args.requests} requests, {total_tokens} tokens "
           f"in {dt:.1f}s ({total_tokens/dt:.1f} tok/s)")
-    return eng.outputs
+    if args.mcim_design != "none":
+        # end-to-end wiring: the real admission trace drives the bank
+        # layer's streaming scheduler through the designs facade
+        from repro import designs
+        design = designs.generate(args.mcim_design)
+        rep = design.replay(eng.arrival_trace())
+        print(f"[serve] mcim replay of {len(eng.arrival_trace())} "
+              f"admissions over {eng.cycle} engine cycles through "
+              f"{design.plan.describe()}: makespan {rep.cycles} bank "
+              f"cycles, {rep.measured_throughput} ops/cycle "
+              f"(scheduler={rep.scheduler})")
+    return eng
 
 
 if __name__ == "__main__":

@@ -138,8 +138,20 @@ def test_adafactor_reduces_loss_and_state_size():
 
 def test_serve_engine_continuous_batching():
     from repro.launch.serve import main as serve_main
-    outputs = serve_main(["--arch", "mamba2-370m", "--smoke",
-                          "--requests", "3", "--slots", "2",
-                          "--prompt-len", "8", "--max-new", "4"])
-    assert len(outputs) == 3
-    assert all(len(v) >= 4 for v in outputs.values())
+    eng = serve_main(["--arch", "mamba2-370m", "--smoke",
+                      "--requests", "3", "--slots", "2",
+                      "--prompt-len", "8", "--max-new", "4"])
+    assert len(eng.outputs) == 3
+    assert all(len(v) >= 4 for v in eng.outputs.values())
+    # admissions were recorded as a streaming-consumable arrival trace:
+    # one entry per request, nondecreasing, starting at cycle 0, and the
+    # third request only entered after a slot freed (2 slots, 3 requests)
+    trace = eng.arrival_trace()
+    assert len(trace) == 3
+    assert list(trace) == sorted(trace)
+    assert trace[0] == 0 and trace[-1] > 0
+    from repro.core.bank import StreamingScheduler
+    assign, makespan = StreamingScheduler(arrivals=trace).schedule(
+        (1, 1), len(trace))
+    assert sorted(op for ops in assign for op in ops) == [0, 1, 2]
+    assert makespan >= trace[-1] + 1
