@@ -1,0 +1,168 @@
+"""Autotuner benchmark: Pareto-front search + paper energy headlines.
+
+Exercises ``repro.autotune`` end to end and emits ``BENCH_autotune.json``:
+
+  * per Table-VIII width (8..128), the TP=1/2 front's best-energy point
+    vs the Star design -- the paper's headline energy direction (up to
+    33% savings) and peak-power direction (65% average reduction) must
+    hold with the correct SIGN at every width;
+  * a multi-point front (TP=1/3: FB / FF / folded-Karatsuba trade
+    area vs fmax vs energy) with its size and scored-candidate count;
+  * the cache contract: the second ``search`` over the same spec space
+    must load from cache with ZERO re-scores.
+
+``--smoke`` asserts all of the above and exits non-zero on violation,
+so CI catches a power-model or search regression, not just a crash.
+Emits ``name,us_per_call,derived`` CSV rows like the other benches.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+from fractions import Fraction
+
+from repro import autotune, designs
+from repro.core import power_model as pm
+from repro.core.mcim import MCIMConfig
+
+WIDTHS = (8, 16, 32, 64, 128)
+STAR = MCIMConfig(arch="star", ct=1)
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.2f},{derived}")
+
+
+def _plan_switched(bits, configs):
+    return sum(c * pm.peak_switched(bits, bits, cfg) for c, cfg in configs)
+
+
+def headline_tp_half(cache_dir: str) -> list:
+    """TP=1/2 best-energy point vs Star at each Table-VIII width."""
+    rows = []
+    for bits in WIDTHS:
+        spec = designs.DesignSpec(bits, bits, Fraction(1, 2))
+        t0 = time.perf_counter()
+        front = autotune.search(spec, cache_dir=cache_dir)
+        us = (time.perf_counter() - t0) * 1e6
+        best = front.best("energy")
+        star_e = pm.energy_per_op_pj(bits, bits, STAR)
+        e_sav = 1 - best.energy_per_op_pj / star_e
+        # same-clock comparison: switched capacitance ratio (clock cancels)
+        p_red = 1 - _plan_switched(bits, best.configs) / \
+            pm.peak_switched(bits, bits, STAR)
+        rows.append({
+            "bits": bits,
+            "tp": "1/2",
+            "front_size": len(front),
+            "n_scored": front.n_scored,
+            "best_energy": best.to_dict(),
+            "star_energy_pj": star_e,
+            "energy_savings_vs_star": e_sav,
+            "peak_power_reduction_vs_star": p_red,
+            # the paper's own TP=1/2 design (one FB CT=2 instance), for
+            # the apples-to-apples up-to-33%/65% comparison
+            "fb2_energy_savings": pm.energy_savings_vs_star(
+                bits, bits, MCIMConfig(arch="fb", ct=2)),
+            "fb2_peak_reduction": pm.peak_power_reduction_vs_star(
+                bits, bits, MCIMConfig(arch="fb", ct=2)),
+        })
+        _row(f"autotune.tp1_2_{bits}b", us,
+             f"front={len(front)} scored={front.n_scored} "
+             f"best=[{best.describe()}] "
+             f"energy_savings={e_sav:.0%} peak_reduction={p_red:.0%} "
+             f"paper=up-to-33%/65%avg")
+    return rows
+
+
+def multi_point_front(cache_dir: str) -> dict:
+    """TP=1/3 @ 32b: the arch trade-off front (FB vs FF vs Karatsuba)."""
+    spec = designs.DesignSpec(32, 32, Fraction(1, 3))
+    t0 = time.perf_counter()
+    front = autotune.search(spec, cache_dir=cache_dir)
+    us = (time.perf_counter() - t0) * 1e6
+    _row("autotune.tp1_3_32b", us,
+         f"front={len(front)} dominated={len(front.dominated)} "
+         f"scored={front.n_scored} "
+         f"best_energy=[{front.best('energy').describe()}] "
+         f"best_fmax=[{front.best('fmax').describe()}]")
+    return {"spec": spec.to_dict(), "front_size": len(front),
+            "n_dominated": len(front.dominated),
+            "n_scored": front.n_scored,
+            "front": [c.to_dict() for c in front]}
+
+
+def cached_rerun(cache_dir: str) -> dict:
+    """Re-search every space above: must be all cache hits, 0 re-scores."""
+    specs = [designs.DesignSpec(b, b, Fraction(1, 2)) for b in WIDTHS]
+    specs.append(designs.DesignSpec(32, 32, Fraction(1, 3)))
+    t0 = time.perf_counter()
+    fronts = [autotune.search(s, cache_dir=cache_dir) for s in specs]
+    us = (time.perf_counter() - t0) * 1e6
+    hits = sum(f.from_cache for f in fronts)
+    rescores = sum(f.n_scored for f in fronts)
+    _row("autotune.cached_rerun", us,
+         f"searches={len(fronts)} cache_hits={hits} re_scores={rescores}")
+    return {"searches": len(fronts), "cache_hits": hits,
+            "re_scores": rescores}
+
+
+def bench_autotune(out_path: str | None = None, smoke: bool = False,
+                   cache_dir: str | None = None):
+    cache_dir = cache_dir or tempfile.mkdtemp(prefix="repro_autotune_bench_")
+    headline = headline_tp_half(cache_dir)
+    tp13 = multi_point_front(cache_dir)
+    rerun = cached_rerun(cache_dir)
+
+    payload = {
+        "smoke": smoke,
+        "autotune_version": autotune.AUTOTUNE_VERSION,
+        "power_model_version": pm.MODEL_VERSION,
+        "tp_half_headline": headline,
+        "tp_third_front": tp13,
+        "cached_rerun": rerun,
+    }
+    path = out_path or os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_autotune.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    _row("autotune.artifact", 0.0, f"wrote={path}")
+
+    if smoke:
+        # regression gates, not just smoke-no-crash
+        for r in headline:
+            assert r["energy_savings_vs_star"] > 0.10, \
+                f"TP=1/2 {r['bits']}b energy saving lost its sign: " \
+                f"{r['energy_savings_vs_star']:.1%}"
+            assert r["peak_power_reduction_vs_star"] > 0.30, \
+                f"TP=1/2 {r['bits']}b peak reduction collapsed: " \
+                f"{r['peak_power_reduction_vs_star']:.1%}"
+        assert tp13["front_size"] >= 3, \
+            f"TP=1/3 front trivial: {tp13['front_size']} points"
+        assert rerun["cache_hits"] == rerun["searches"] and \
+            rerun["re_scores"] == 0, f"cache contract broken: {rerun}"
+        _row("autotune.smoke", 0.0, "asserts=pass")
+    return payload
+
+
+ALL = [bench_autotune]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("out", nargs="?", default=None,
+                    help="output JSON path (default: repo-root "
+                         "BENCH_autotune.json)")
+    ap.add_argument("--out", dest="out_flag", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="assert headline signs + cache contract")
+    ap.add_argument("--cache-dir", default=None,
+                    help="autotune cache dir (default: fresh temp dir)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    bench_autotune(args.out_flag or args.out, smoke=args.smoke,
+                   cache_dir=args.cache_dir)

@@ -14,6 +14,7 @@ from fractions import Fraction
 
 from repro import designs
 from repro.core import area_model as am
+from repro.core import power_model as pm
 from repro.core import timing_model as tm
 from repro.core.mcim import MCIMConfig
 from repro.core import planner
@@ -179,6 +180,32 @@ def table10_fpga_luts():
              f"ratio={ours / paper_luts:.2f}")
 
 
+def table_energy():
+    """Energy/peak-power sweep (paper Sec. V headline direction): TP=1/2
+    folded designs must show double-digit energy-per-op savings (paper:
+    up to 33%) and a large peak-power reduction (paper: 65% average)
+    vs the Star design at every Table-VIII width."""
+    peaks = []
+    for bits in (8, 16, 32, 64, 128):
+        fb2 = MCIMConfig(arch="fb", ct=2)
+        e_sav = pm.energy_savings_vs_star(bits, bits, fb2)
+        p_red = pm.peak_power_reduction_vs_star(bits, bits, fb2)
+        peaks.append(p_red)
+        e = pm.energy_per_op_pj(bits, bits, fb2)
+        _row(f"table_energy.fb2_{bits}b",
+             f"E={e:.2f}pJ/op energy_savings={e_sav:.0%} "
+             f"peak_reduction={p_red:.0%} paper=up-to-33%/65%avg")
+    _row("table_energy.avg_peak_reduction",
+         f"avg={sum(peaks) / len(peaks):.0%} paper=65%")
+    # CT sweep at 32b: energy must fall monotonically with CT
+    es = [pm.energy_per_op_pj(32, 32, MCIMConfig(arch="fb", ct=ct))
+          for ct in (2, 3, 4, 6, 8)]
+    mono = all(a > b for a, b in zip(es, es[1:]))
+    _row("table_energy.fb_ct_sweep_32b",
+         "E[pJ/op]=" + "/".join(f"{e:.2f}" for e in es)
+         + f" monotone_decreasing={mono}")
+
+
 def use_case_fractional_tp():
     """Sec. V-E use case 1: TP=3.5 bank vs 4x Star (the paper's headline
     deployment story), via the registered design point."""
@@ -192,4 +219,4 @@ def use_case_fractional_tp():
 ALL = [table2_16x16_relaxed, table3_128x128_relaxed, table4_16x16_strict,
        table5_max_freq, table6_128x128_strict, table7_ct_sweep,
        table8_best_designs, table9_128x64_vs_array, table10_fpga_luts,
-       use_case_fractional_tp]
+       table_energy, use_case_fractional_tp]

@@ -32,7 +32,23 @@ def main():
           f"(fallback={tight.timing_fallback})")
     print(f"  latency {tight.latency_cycles} cycles, "
           f"fmax ~{tight.fmax_estimate:.2f} GHz, "
-          f"area {tight.area:.0f} um2 (incl. synthesis stress)")
+          f"area {tight.area:.0f} um2 (incl. synthesis stress), "
+          f"energy {tight.energy_per_op_pj:.2f} pJ/op, "
+          f"peak {tight.peak_power_mw:.2f} mW")
+
+    # -- energy/peak-power model + autotuner (paper Sec. V headlines) ----
+    from repro import autotune
+    front = autotune.search(designs.DesignSpec(32, 32, Fraction(1, 3)))
+    print(f"\nPareto front over every TP=1/3 decomposition "
+          f"({len(front)} non-dominated of "
+          f"{len(front.front) + len(front.dominated)}):")
+    for c in front:
+        print(f"  {c.describe()}")
+    low = front.best("energy").compile()
+    print(f"best-energy point compiles + multiplies exactly: "
+          f"{low.mul(a % 2**32, b % 2**32) == (a % 2**32) * (b % 2**32)}")
+    lp = designs.generate("tbl8_w32_lowpower")   # objective='energy' spec
+    print(f"registered low-power design: {lp.describe()}")
 
     # -- fractional-throughput planning (use case 1, Sec. V-E) -----------
     d = designs.generate("tp3p5_w32")          # pre-registered point

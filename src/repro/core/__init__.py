@@ -15,9 +15,12 @@ for direct use:
   bank             -- executable multiplier banks for planner Plans
                       (pluggable schedulers/backends + sharded execution)
   area_model       -- ASIC-area cost model used by benchmarks/
+  power_model      -- switching-energy / peak-power cost model
+                      (the paper's 33%-energy / 65%-peak-power claims)
 """
 from . import limbs
 from . import area_model
+from . import power_model
 from . import planner
 from . import bank
 from .bank import Bank, BankReport, sharded_execute
@@ -26,7 +29,7 @@ from .schoolbook import star_mul, feedback_mul, feedforward_mul
 from .karatsuba import karatsuba_mul, karatsuba_ppm
 
 __all__ = [
-    "limbs", "area_model", "planner", "bank",
+    "limbs", "area_model", "power_model", "planner", "bank",
     "Bank", "BankReport", "sharded_execute",
     "MCIMConfig", "mcim_mul", "make_multiplier", "mul32x32_64",
     "star_mul", "feedback_mul", "feedforward_mul",

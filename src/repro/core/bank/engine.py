@@ -59,6 +59,10 @@ class BankReport:
     plan_throughput: Fraction
     working_set_bytes: int            # sum of per-instance VMEM footprints
     scheduler: str = "round_robin"    # policy that produced the makespan
+    # filled in by CompiledDesign.report() (the bank itself has no spec,
+    # so no clock/stress context to model power with)
+    energy_per_op_pj: float | None = None
+    peak_power_mw: float | None = None
 
     @property
     def measured_throughput(self) -> Fraction:
@@ -69,6 +73,13 @@ class BankReport:
         if not self.cycles:
             return 0.0
         return float(self.measured_throughput / self.plan_throughput)
+
+    @property
+    def energy_pj(self) -> float | None:
+        """Total modeled switching energy of the batch."""
+        if self.energy_per_op_pj is None:
+            return None
+        return self.batch * self.energy_per_op_pj
 
 
 # ------------------------------------------------------------------ the bank

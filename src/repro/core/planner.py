@@ -16,6 +16,18 @@ from fractions import Fraction
 
 from .mcim import MCIMConfig
 from . import area_model
+from . import power_model
+
+#: planning objectives: the scalar each candidate design is ranked by
+OBJECTIVES = ("area", "energy")
+
+
+def _objective_key(bits_a: int, bits_b: int, objective: str):
+    if objective == "area":
+        return lambda c: area_model.mcim_area(bits_a, bits_b, c).total
+    if objective == "energy":
+        return lambda c: power_model.mcim_energy(bits_a, bits_b, c).total
+    raise ValueError(f"objective must be one of {OBJECTIVES}")
 
 #: Fractional TPs are quantized to this denominator bound (the largest
 #: CT combination the Sec. V-B planner explores).  repro.designs mirrors
@@ -45,8 +57,14 @@ class Plan:
 
 
 def best_single(bits_a: int, bits_b: int, ct: int,
-                strict_timing: bool = False) -> MCIMConfig:
-    """Best single MCIM design for a given CT (paper Table VIII policy)."""
+                strict_timing: bool = False,
+                objective: str = "area") -> MCIMConfig:
+    """Best single MCIM design for a given CT (paper Table VIII policy).
+
+    ``objective`` ranks the candidate set by the area model (default,
+    the paper's tables) or by the power model's per-op energy (the
+    low-power registry points); the candidate set itself is identical.
+    """
     if ct == 1:
         return MCIMConfig(arch="star", ct=1)
     candidates = []
@@ -65,8 +83,7 @@ def best_single(bits_a: int, bits_b: int, ct: int,
                                              levels=best_k, adder="3ca"))
     if not candidates:   # strict timing && ct>2 without FB: pipeline FF anyway
         candidates.append(MCIMConfig(arch="ff", ct=ct))
-    return min(candidates,
-               key=lambda c: area_model.mcim_area(bits_a, bits_b, c).total)
+    return min(candidates, key=_objective_key(bits_a, bits_b, objective))
 
 
 def best_karatsuba_levels(bits_a: int, bits_b: int, max_levels: int = 4) -> int:
@@ -81,7 +98,8 @@ def best_karatsuba_levels(bits_a: int, bits_b: int, max_levels: int = 4) -> int:
 
 
 def plan_throughput(bits_a: int, bits_b: int, tp: Fraction | float,
-                    strict_timing: bool = False) -> Plan:
+                    strict_timing: bool = False,
+                    objective: str = "area") -> Plan:
     """Multiplier bank for a (possibly fractional) multiplications/cycle TP.
 
     Paper use case 1: TP = i/j with i/j not an integer, e.g. 3.5 -> three
@@ -96,7 +114,8 @@ def plan_throughput(bits_a: int, bits_b: int, tp: Fraction | float,
     if frac:
         ct = int(1 / frac) if (1 / frac) == int(1 / frac) else None
         if ct is not None:
-            configs.append((1, best_single(bits_a, bits_b, ct, strict_timing)))
+            configs.append((1, best_single(bits_a, bits_b, ct, strict_timing,
+                                           objective)))
         else:
             # e.g. 5/6 -> one CT=2 + one CT=3 (paper Sec. V-B combinations)
             remaining = frac
@@ -104,7 +123,7 @@ def plan_throughput(bits_a: int, bits_b: int, tp: Fraction | float,
                 piece = Fraction(1, ct_try)
                 while remaining >= piece:
                     configs.append((1, best_single(bits_a, bits_b, ct_try,
-                                                   strict_timing)))
+                                                   strict_timing, objective)))
                     remaining -= piece
                 if remaining == 0:
                     break

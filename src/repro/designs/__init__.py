@@ -26,11 +26,12 @@ should start here.
 """
 from .spec import (DesignSpec, DesignError, TimingError, LatencyError,
                    MAX_TP_DENOMINATOR)
-from .compile import CompiledDesign, generate
-from .registry import register, get, names, TABLE_VIII, USE_CASES
+from .compile import CompiledDesign, generate, compile_plan
+from .registry import (register, get, names, TABLE_VIII, USE_CASES,
+                       LOW_POWER)
 
 __all__ = [
-    "DesignSpec", "CompiledDesign", "generate",
+    "DesignSpec", "CompiledDesign", "generate", "compile_plan",
     "DesignError", "TimingError", "LatencyError", "MAX_TP_DENOMINATOR",
-    "register", "get", "names", "TABLE_VIII", "USE_CASES",
+    "register", "get", "names", "TABLE_VIII", "USE_CASES", "LOW_POWER",
 ]

@@ -26,6 +26,7 @@ from repro.core.bank import Bank, BankReport, StreamingScheduler, \
     sharded_execute
 from repro.core.mcim import MCIMConfig
 from repro.core import area_model
+from repro.core import power_model
 
 from .spec import DesignSpec, DesignError, TimingError, LatencyError
 
@@ -129,13 +130,16 @@ class CompiledDesign:
 
     # ------------------------------------------------------------ reports
     def report(self, batch: int) -> BankReport:
-        """Cycle accounting for one batch (per replica when sharded)."""
+        """Cycle accounting for one batch (per replica when sharded),
+        with the design's modeled energy/op and peak power attached."""
         if self.spec.replicas > 1:
             if batch % self.spec.replicas:
                 raise ValueError(f"batch {batch} does not divide over "
                                  f"{self.spec.replicas} replicas")
             batch //= self.spec.replicas
-        return self.bank.report(batch)
+        return dataclasses.replace(self.bank.report(batch),
+                                   energy_per_op_pj=self.energy_per_op_pj,
+                                   peak_power_mw=self.peak_power_mw)
 
     def replay(self, arrivals) -> BankReport:
         """Replay an arrival trace (e.g. ``ServeEngine.arrival_trace()``)
@@ -182,10 +186,41 @@ class CompiledDesign:
                      for _, cfg in self.plan.configs)
         return 1.0 / period
 
+    @property
+    def _stress(self) -> float:
+        """Synthesis-stress multiplier of the spec's clock target (1.0
+        when relaxed): tight clocks force larger, higher-capacitance
+        cells, inflating area AND switched energy alike."""
+        if self.spec.clock_ns is None:
+            return 1.0
+        return timing_model.stress("star", _timing_bits(self.spec),
+                                   self.spec.clock_ns)
+
+    @property
+    def energy_per_op_pj(self) -> float:
+        """Modeled energy per multiplication (pJ), throughput-weighted
+        over the bank's instances, including synthesis stress."""
+        return power_model.plan_energy_per_op_pj(
+            self.spec.bits_a, self.spec.bits_b, self.plan.configs,
+            stress=self._stress)
+
+    @property
+    def peak_power_mw(self) -> float:
+        """Modeled peak power (mW, all replicas): worst-cycle switched
+        capacitance of every instance together, at the spec's clock (or
+        the slowest instance's natural period when relaxed)."""
+        period = 1.0 / self.fmax_estimate
+        return power_model.plan_peak_power_mw(
+            self.spec.bits_a, self.spec.bits_b, self.plan.configs,
+            clock_ns=period, stress=self._stress) * self.spec.replicas
+
     def describe(self) -> str:
         extra = " timing_fallback" if self.timing_fallback else ""
         return (f"CompiledDesign[{self.spec.describe()} -> "
-                f"{self.plan.describe()}  backend={self.bank.backend}  "
+                f"{self.plan.describe()}  "
+                f"energy={self.energy_per_op_pj:.2f}pJ/op  "
+                f"peak={self.peak_power_mw:.2f}mW  "
+                f"backend={self.bank.backend}  "
                 f"scheduler={self.bank.scheduler.name}{extra}]")
 
     # --------------------------------------------------------- provenance
@@ -216,7 +251,8 @@ def _achieved_throughput(plan: planner.Plan):
 def _plan_with_timing(spec: DesignSpec):
     plan = planner.plan_throughput(spec.bits_a, spec.bits_b,
                                    spec.throughput,
-                                   strict_timing=spec.strict_timing)
+                                   strict_timing=spec.strict_timing,
+                                   objective=spec.objective)
     if _achieved_throughput(plan) != spec.throughput:
         # plan_throughput silently drops the residual when a fractional
         # TP cannot be decomposed over its CT set; the facade's contract
@@ -235,7 +271,8 @@ def _plan_with_timing(spec: DesignSpec):
             # candidates only (the paper's strict-timing tables)
             plan = planner.plan_throughput(spec.bits_a, spec.bits_b,
                                            spec.throughput,
-                                           strict_timing=True)
+                                           strict_timing=True,
+                                           objective=spec.objective)
             fallback = True
             bad = _timing_violations(plan, bits, spec.clock_ns)
         if bad:
@@ -301,3 +338,52 @@ def generate(spec: DesignSpec, mesh=None) -> CompiledDesign:
     return CompiledDesign(spec, plan, bank,
                           mesh=_resolve_mesh(spec, mesh),
                           timing_fallback=fallback)
+
+
+def compile_plan(spec: DesignSpec, configs, mesh=None) -> CompiledDesign:
+    """Compile ``spec`` with an EXPLICIT instance list, bypassing the
+    planner's pick-one policy.
+
+    This is the autotuner's compile path: ``repro.autotune`` enumerates
+    candidate decompositions itself and materializes any point off its
+    Pareto front through here.  ``configs`` is an iterable of
+    ``(count, MCIMConfig)``; it must sum to exactly ``spec.throughput``
+    and every instance must meet the spec's clock/latency constraints
+    (the same gate ``generate`` applies, not a duplicate of it).
+    """
+    configs = tuple((int(count), cfg) for count, cfg in configs)
+    if spec.signed:
+        configs = tuple((count, dataclasses.replace(cfg, signed=True))
+                        for count, cfg in configs)
+    area = sum(count * area_model.area_um2(spec.bits_a, spec.bits_b, cfg)
+               for count, cfg in configs)
+    plan = planner.Plan(configs=configs, throughput=spec.throughput,
+                        area=area)
+    if _achieved_throughput(plan) != spec.throughput:
+        raise DesignError(
+            f"explicit configs sum to TP={_achieved_throughput(plan)}, "
+            f"spec wants {spec.throughput}")
+    bits = _timing_bits(spec)
+    if spec.strict_timing:
+        bad = [cfg for _, cfg in configs
+               if not timing_model.pipelineable(cfg.arch, cfg.adder)]
+        if bad:
+            raise TimingError(f"strict spec given non-pipelineable "
+                              f"instances: {[cfg.arch for cfg in bad]}")
+    if spec.clock_ns is not None:
+        bad = _timing_violations(plan, bits, spec.clock_ns)
+        if bad:
+            raise TimingError(
+                f"explicit configs miss clock {spec.clock_ns} ns: "
+                f"{[cfg.arch for cfg in bad]}")
+    if spec.latency_budget is not None:
+        lat = max(_instance_latency(cfg, bits, spec.clock_ns)
+                  for _, cfg in configs)
+        if lat > spec.latency_budget:
+            raise LatencyError(f"explicit configs need {lat} cycles, "
+                               f"over the budget of {spec.latency_budget}")
+    backend = _resolve_backend(spec)
+    bank = Bank(plan, spec.bits_a, spec.bits_b, backend=backend,
+                scheduler=spec.scheduler)
+    return CompiledDesign(spec, plan, bank,
+                          mesh=_resolve_mesh(spec, mesh))

@@ -18,6 +18,11 @@ is exactly that customization surface, frozen and serializable:
   * scheduler / backend   -- bank dispatch policy and execution
                              substrate ("auto" resolves per platform)
   * replicas / mesh_axis  -- sharded multi-bank replication
+  * objective             -- scalar the planner ranks candidate designs
+                             by: "area" (default, the paper's tables)
+                             or "energy" (the low-power registry
+                             points); :mod:`repro.autotune` searches
+                             the full multi-objective front instead
 
 ``to_json``/``from_json`` round-trip losslessly (the throughput
 Fraction is carried as an exact "num/den" string), so BENCH artifacts
@@ -33,7 +38,7 @@ from fractions import Fraction
 #: single owner of the TP quantization bound: the spec quantizes with
 #: exactly the denominator plan_throughput will use, so a spec's
 #: throughput always equals its compiled plan's.
-from repro.core.planner import MAX_TP_DENOMINATOR
+from repro.core.planner import MAX_TP_DENOMINATOR, OBJECTIVES
 
 _BACKENDS = ("auto", "core", "kernel")
 _SPEC_VERSION = 1
@@ -65,6 +70,7 @@ class DesignSpec:
     backend: str = "auto"               # auto | core | kernel
     replicas: int = 1                   # bank replicas over a mesh axis
     mesh_axis: str = "data"
+    objective: str = "area"             # planner ranking: area | energy
 
     def __post_init__(self):
         tp = Fraction(self.throughput).limit_denominator(MAX_TP_DENOMINATOR)
@@ -81,6 +87,8 @@ class DesignSpec:
             raise DesignError(f"backend must be one of {_BACKENDS}")
         if self.replicas < 1:
             raise DesignError("replicas must be >= 1")
+        if self.objective not in OBJECTIVES:
+            raise DesignError(f"objective must be one of {OBJECTIVES}")
 
     # ------------------------------------------------------------ builders
     @classmethod
@@ -108,6 +116,7 @@ class DesignSpec:
             "backend": self.backend,
             "replicas": self.replicas,
             "mesh_axis": self.mesh_axis,
+            "objective": self.objective,
         }
 
     @classmethod
@@ -143,4 +152,6 @@ class DesignSpec:
             parts.append("signed")
         if self.replicas > 1:
             parts.append(f"x{self.replicas}@{self.mesh_axis}")
+        if self.objective != "area":
+            parts.append(f"obj={self.objective}")
         return "DesignSpec(" + " ".join(parts) + ")"

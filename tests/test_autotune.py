@@ -1,0 +1,239 @@
+"""repro.autotune: enumeration, Pareto front, cache, compile-back.
+
+The autotuner's contract: ``search(spec_space)`` returns the
+non-dominated set over EVERY decomposition realizing the spec, each
+point compiles to a working ``CompiledDesign`` through the same timing
+gate ``generate()`` uses, and a cached re-run re-scores nothing.
+"""
+import json
+from fractions import Fraction
+
+import pytest
+
+from repro import autotune, designs
+from repro.autotune import (Candidate, ParetoFront, ct_decompositions,
+                            enumerate_configs, pareto_front)
+from repro.core import power_model as pm
+from repro.core.mcim import MCIMConfig
+
+
+def _spec(bits=32, tp=Fraction(1, 3), **kw):
+    return designs.DesignSpec(bits, bits, tp, **kw)
+
+
+# ------------------------------------------------------------- enumeration
+
+def test_ct_decompositions_exact_cover():
+    for frac in (Fraction(1, 2), Fraction(1, 3), Fraction(5, 6),
+                 Fraction(11, 12)):
+        decs = ct_decompositions(frac)
+        assert decs, f"no decomposition for {frac}"
+        for cts in decs:
+            assert sum(Fraction(1, ct) for ct in cts) == frac
+            assert tuple(sorted(cts)) == cts  # canonical: non-decreasing
+
+
+def test_ct_decompositions_include_paper_combination():
+    # Sec. V-B: 5/6 = 1/2 + 1/3
+    assert (2, 3) in ct_decompositions(Fraction(5, 6))
+
+
+def test_enumerate_mixed_bank_has_star_base():
+    # TP=7/2 -> 3x Star + one folded 1/2 slot, like the paper's use case
+    for configs in enumerate_configs(_spec(tp=Fraction(7, 2))):
+        (n, star), *rest = configs
+        assert star.arch == "star" and n == 3
+        assert sum(Fraction(c, cfg.ct) for c, cfg in rest) == Fraction(1, 2)
+
+
+def test_enumerate_deduplicates_multisets():
+    configs = enumerate_configs(_spec(tp=Fraction(2, 3)))
+    keys = [tuple(sorted((c, cfg.arch, cfg.ct, cfg.levels, cfg.adder)
+                         for c, cfg in cs)) for cs in configs]
+    assert len(keys) == len(set(keys))
+
+
+def test_enumerate_respects_clock_gate():
+    # 0.31 ns: fb cannot meet timing at 32b (paper Table IV), so no
+    # candidate may contain an fb instance
+    for configs in enumerate_configs(_spec(clock_ns=0.31)):
+        assert all(cfg.arch != "fb" for _, cfg in configs)
+    # relaxed: fb candidates exist
+    assert any(cfg.arch == "fb"
+               for configs in enumerate_configs(_spec())
+               for _, cfg in configs)
+
+
+def test_enumerate_strict_gate_matches_pipelineable():
+    from repro.core import timing_model
+    for configs in enumerate_configs(_spec(strict_timing=True,
+                                           clock_ns=0.31)):
+        for _, cfg in configs:
+            assert timing_model.pipelineable(cfg.arch, cfg.adder)
+
+
+# ------------------------------------------------------------ pareto logic
+
+def _mk(key_tag, area, lat, fmax, e, p):
+    return Candidate(spec=_spec(tp=Fraction(1, key_tag)), configs=(
+        (1, MCIMConfig(arch="fb", ct=key_tag)),),
+        area_um2=area, latency_cycles=lat, fmax_ghz=fmax,
+        energy_per_op_pj=e, peak_power_mw=p, slack_ns=(0.0,))
+
+
+def test_pareto_front_no_dominated_point():
+    front = autotune.search(_spec(), use_cache=False)
+    assert len(front) >= 2
+    for a in front:
+        for b in front:
+            assert not a.dominates(b)
+
+
+def test_pareto_dominated_have_provenance():
+    front = autotune.search(_spec(), use_cache=False)
+    assert front.dominated, "expected some dominated candidates"
+    front_keys = {c.key for c in front}
+    all_keys = front_keys | {c.key for c in front.dominated}
+    for c in front.dominated:
+        assert c.dominated_by in all_keys
+        assert c.dominated_by != c.key
+
+
+def test_pareto_order_invariance():
+    scored = [autotune.score(_spec(), cfgs)
+              for cfgs in enumerate_configs(_spec())]
+    f1, d1 = pareto_front(scored)
+    f2, d2 = pareto_front(list(reversed(scored)))
+    assert [c.key for c in f1] == [c.key for c in f2]
+    assert [(c.key, c.dominated_by) for c in d1] == \
+        [(c.key, c.dominated_by) for c in d2]
+
+
+def test_domination_is_strict():
+    a = _mk(2, 100, 2, 1.0, 1.0, 1.0)
+    b = _mk(3, 100, 2, 1.0, 1.0, 1.0)
+    assert not a.dominates(b) and not b.dominates(a)  # equal: no domination
+    c = _mk(4, 90, 2, 1.0, 1.0, 1.0)
+    assert c.dominates(a) and not a.dominates(c)
+
+
+def test_best_per_objective():
+    front = autotune.search(_spec(), use_cache=False)
+    for obj, (attr, maximize) in autotune.OBJECTIVES.items():
+        best = front.best(obj)
+        vals = [getattr(c, attr) for c in front]
+        want = max(vals) if maximize else min(vals)
+        assert getattr(best, attr) == want
+    with pytest.raises(ValueError):
+        front.best("beauty")
+
+
+# ----------------------------------------------------------------- scoring
+
+def test_scores_match_compiled_design():
+    # a candidate's metrics must equal the compiled design's properties
+    front = autotune.search(_spec(), use_cache=False)
+    c = front.best("energy")
+    d = c.compile()
+    assert d.energy_per_op_pj == pytest.approx(c.energy_per_op_pj)
+    assert d.peak_power_mw == pytest.approx(c.peak_power_mw)
+    assert d.latency_cycles == c.latency_cycles
+    assert d.area == pytest.approx(c.area_um2)
+
+
+def test_candidate_compiles_bit_exact():
+    front = autotune.search(_spec(bits=16), use_cache=False)
+    for c in list(front)[:3]:
+        d = c.compile()
+        assert d.mul(0xBEEF, 0xF00D) == 0xBEEF * 0xF00D
+
+
+def test_slack_nonnegative_at_scoring_period():
+    front = autotune.search(_spec(), use_cache=False)
+    for c in list(front) + list(front.dominated):
+        assert len(c.slack_ns) == len(c.configs)
+        assert all(s >= 0 for s in c.slack_ns)
+        assert min(c.slack_ns) == pytest.approx(0.0, abs=1e-5)
+
+
+def test_tp_half_energy_savings_sign_all_widths():
+    # acceptance criterion: correct sign at every Table-VIII width
+    for bits in (8, 16, 32, 64, 128):
+        front = autotune.search(_spec(bits=bits, tp=Fraction(1, 2)),
+                                use_cache=False)
+        best = front.best("energy")
+        star_e = pm.energy_per_op_pj(bits, bits, MCIMConfig(arch="star",
+                                                            ct=1))
+        assert best.energy_per_op_pj < star_e * 0.9, bits
+
+
+# ------------------------------------------------------------------- cache
+
+def test_cache_zero_rescores(tmp_path):
+    spec = _spec()
+    first = autotune.search(spec, cache_dir=str(tmp_path))
+    assert not first.from_cache and first.n_scored > 0
+    second = autotune.search(spec, cache_dir=str(tmp_path))
+    assert second.from_cache and second.n_scored == 0
+    assert [c.key for c in second] == [c.key for c in first]
+    assert [c.to_dict() for c in second.front] == \
+        [c.to_dict() for c in first.front]
+
+
+def test_cache_key_depends_on_spec_and_model(tmp_path):
+    k1 = autotune.space_key([_spec()])
+    k2 = autotune.space_key([_spec(tp=Fraction(1, 2))])
+    assert k1 != k2
+    # order-insensitive over the space
+    a, b = _spec(), _spec(tp=Fraction(1, 2))
+    assert autotune.space_key([a, b]) == autotune.space_key([b, a])
+
+
+def test_cache_corrupt_file_is_miss(tmp_path):
+    spec = _spec()
+    first = autotune.search(spec, cache_dir=str(tmp_path))
+    for f in tmp_path.iterdir():
+        f.write_text("{not json")
+    again = autotune.search(spec, cache_dir=str(tmp_path))
+    assert not again.from_cache and again.n_scored == first.n_scored
+
+
+def test_front_serialization_round_trip():
+    front = autotune.search(_spec(), use_cache=False)
+    again = ParetoFront.from_json(front.to_json())
+    assert [c.to_dict() for c in again.front] == \
+        [c.to_dict() for c in front.front]
+    assert [c.to_dict() for c in again.dominated] == \
+        [c.to_dict() for c in front.dominated]
+    assert json.loads(front.to_json())["space_key"] == front.space_key
+
+
+# ---------------------------------------------------------- designs facade
+
+def test_generate_best_compiles(tmp_path):
+    d = autotune.generate_best(_spec(bits=16, tp=Fraction(1, 2)),
+                               objective="energy",
+                               cache_dir=str(tmp_path))
+    assert d.mul(1234, 5678) == 1234 * 5678
+
+
+def test_registry_name_resolves(tmp_path):
+    front = autotune.search("tbl8_w16_lowpower", cache_dir=str(tmp_path))
+    assert len(front) >= 1
+
+
+def test_objective_energy_spec_changes_pick():
+    # the registered low-power points plan with objective='energy';
+    # generate() must stay the single-plan path and still work
+    lp = designs.generate("tbl8_w32_lowpower")
+    assert lp.spec.objective == "energy"
+    assert lp.mul(0xCAFE, 0xBABE) == 0xCAFE * 0xBABE
+    # default objective unchanged for existing names
+    assert designs.generate("tbl8_w32_relaxed").spec.objective == "area"
+
+
+def test_spec_objective_round_trips():
+    s = _spec(objective="energy")
+    assert designs.DesignSpec.from_json(s.to_json()) == s
+    with pytest.raises(Exception):
+        _spec(objective="speed")

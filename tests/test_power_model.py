@@ -1,0 +1,178 @@
+"""core.power_model: calibration, paper headline directions, invariants.
+
+The power model has ONE fitted scale (FJ_PER_CELL, Star 16x16 = 1 pJ);
+everything else is bit-level activity counting.  These tests pin the
+calibration anchor exactly and check the paper's Sec. V energy story:
+TP=1/2 folded designs save double-digit energy (paper: up to 33%) and
+cut peak power hard (paper: 65% average), and deeper folding never
+costs energy.
+"""
+import pytest
+
+from repro.core import power_model as pm
+from repro.core import area_model as am
+from repro.core import timing_model as tm
+from repro.core.mcim import MCIMConfig
+
+STAR = MCIMConfig(arch="star", ct=1)
+FB2 = MCIMConfig(arch="fb", ct=2)
+WIDTHS = (8, 16, 32, 64, 128)
+
+
+# ------------------------------------------------------------ calibration
+
+def test_calibration_anchor_exact():
+    # the single fitted scale: Star 16x16 == 1.0 pJ/op by construction
+    assert pm.energy_per_op_pj(16, 16, STAR) == pytest.approx(1.0)
+
+
+def test_breakdown_components_positive_and_sum():
+    for cfg in (STAR, FB2, MCIMConfig(arch="ff", ct=4),
+                MCIMConfig(arch="karatsuba", ct=3, levels=2, adder="3ca")):
+        e = pm.mcim_energy(32, 32, cfg)
+        assert e.ppm > 0 and e.compressor > 0 and e.final_adder > 0
+        assert e.registers >= 0 and e.leakage > 0
+        assert e.dynamic == pytest.approx(
+            e.ppm + e.compressor + e.final_adder + e.registers)
+        assert e.total == pytest.approx(e.dynamic + e.leakage)
+
+
+def test_leakage_tracks_area():
+    # leakage is proportional to modeled area (per-op, NOT x cycles)
+    for cfg in (STAR, FB2, MCIMConfig(arch="fb", ct=6)):
+        e = pm.mcim_energy(32, 32, cfg)
+        area_cells = am.mcim_area(32, 32, cfg).total
+        assert e.leakage == pytest.approx(pm.LEAK_RATIO * area_cells)
+
+
+# ------------------------------------------------- paper headline: energy
+
+@pytest.mark.parametrize("bits", WIDTHS)
+def test_tp_half_double_digit_savings(bits):
+    sav = pm.energy_savings_vs_star(bits, bits, FB2)
+    assert sav > 0.10, f"{bits}b FB2 saving {sav:.1%} not double-digit"
+    assert sav < 0.40, f"{bits}b FB2 saving {sav:.1%} above paper ceiling"
+
+
+def test_savings_grow_with_width_toward_paper_max():
+    # paper: 'up to 33%' -- the max over Table-VIII widths must approach
+    # it from below, and widen monotonically (glitch depth grows with nb)
+    savs = [pm.energy_savings_vs_star(b, b, FB2) for b in WIDTHS]
+    assert all(a < b for a, b in zip(savs, savs[1:]))
+    assert 0.25 < max(savs) < 0.40
+
+
+# --------------------------------------------- paper headline: peak power
+
+@pytest.mark.parametrize("bits", WIDTHS)
+def test_tp_half_peak_reduction(bits):
+    red = pm.peak_power_reduction_vs_star(bits, bits, FB2)
+    assert red > 0.40, f"{bits}b FB2 peak reduction {red:.1%} too small"
+
+
+def test_average_peak_reduction_near_paper():
+    reds = [pm.peak_power_reduction_vs_star(b, b, FB2) for b in WIDTHS]
+    avg = sum(reds) / len(reds)
+    assert 0.50 < avg < 0.75, f"avg peak reduction {avg:.1%} vs paper 65%"
+
+
+@pytest.mark.parametrize("arch,ct", [("fb", 2), ("fb", 4), ("fb", 8),
+                                     ("ff", 2), ("ff", 6)])
+def test_peak_switched_below_star(arch, ct):
+    for bits in WIDTHS:
+        cfg = MCIMConfig(arch=arch, ct=ct)
+        assert pm.peak_switched(bits, bits, cfg) < \
+            pm.peak_switched(bits, bits, STAR)
+
+
+def test_karatsuba_peak_below_star_at_planner_widths():
+    # the planner only picks karatsuba at >=128b; peak <= Star must hold
+    # from 16b up (below that the recursion overhead dominates)
+    for bits in (16, 32, 64, 128, 256):
+        for levels in (1, 2, 3):
+            cfg = MCIMConfig(arch="karatsuba", ct=3, levels=levels,
+                             adder="3ca")
+            assert pm.peak_switched(bits, bits, cfg) < \
+                pm.peak_switched(bits, bits, STAR), (bits, levels)
+
+
+# ------------------------------------------------------- CT monotonicity
+
+@pytest.mark.parametrize("bits", (4, 8, 16, 32, 64, 128))
+def test_energy_strictly_decreases_with_ct(bits):
+    cts = range(2, min(12, bits) + 1)
+    es = [pm.mcim_energy(bits, bits, MCIMConfig(arch="fb", ct=ct)).total
+          for ct in cts]
+    assert all(a > b for a, b in zip(es, es[1:])), \
+        f"fb energy not strictly decreasing over ct at {bits}b: {es}"
+
+
+def test_folded_always_cheaper_than_star():
+    for bits in WIDTHS:
+        star = pm.mcim_energy(bits, bits, STAR).total
+        for arch in ("fb", "ff"):
+            for ct in (2, 3, 4, 6):
+                e = pm.mcim_energy(bits, bits,
+                                   MCIMConfig(arch=arch, ct=ct)).total
+                assert e < star, (bits, arch, ct)
+
+
+# ------------------------------------------------------------- structure
+
+def test_signed_overhead():
+    u = pm.mcim_energy(32, 32, FB2)
+    s = pm.mcim_energy(32, 32, MCIMConfig(arch="fb", ct=2, signed=True))
+    assert s.total > u.total
+    assert s.compressor == pytest.approx(u.compressor * pm.SIGNED_OVERHEAD)
+    assert s.ppm == u.ppm          # PP generation itself is unchanged
+
+
+def test_karatsuba_energy_sane():
+    # folded karatsuba at 128b must be cheaper than star, and 3CA
+    # (narrower final adders, one per cycle) cheaper than 1CA
+    star = pm.mcim_energy(128, 128, STAR).total
+    for levels in (1, 2):
+        k3 = pm.mcim_energy(128, 128, MCIMConfig(
+            arch="karatsuba", ct=3, levels=levels, adder="3ca")).total
+        k1 = pm.mcim_energy(128, 128, MCIMConfig(
+            arch="karatsuba", ct=3, levels=levels, adder="1ca")).total
+        assert k3 < star and k1 < star
+        assert k3 < k1
+
+
+def test_peak_power_mw_units():
+    # peak power at an explicit clock must scale inversely with period
+    p1 = pm.peak_power_mw(32, 32, FB2, clock_ns=1.0)
+    p2 = pm.peak_power_mw(32, 32, FB2, clock_ns=2.0)
+    assert p1 == pytest.approx(2 * p2)
+    # default clock = the design's own combinational period
+    dflt = pm.peak_power_mw(32, 32, FB2)
+    assert dflt == pytest.approx(
+        pm.peak_power_mw(32, 32, FB2, clock_ns=tm.t_comb("fb", 32)))
+
+
+# ------------------------------------------------------- plan aggregation
+
+def test_plan_energy_is_throughput_weighted():
+    # a mixed bank's energy/op is weighted by each instance's op share
+    cfgs = ((3, STAR), (1, FB2))       # the TP=3.5 use-case bank
+    e = pm.plan_energy_per_op_pj(32, 32, cfgs)
+    e_star = pm.energy_per_op_pj(32, 32, STAR)
+    e_fb = pm.energy_per_op_pj(32, 32, FB2)
+    w_star, w_fb = 3.0, 0.5            # ops/cycle contributed
+    expect = (w_star * e_star + w_fb * e_fb) / (w_star + w_fb)
+    assert e == pytest.approx(expect)
+    assert min(e_star, e_fb) < e < max(e_star, e_fb)
+
+
+def test_plan_peak_sums_instances():
+    cfgs = ((2, FB2),)
+    one = pm.plan_peak_power_mw(32, 32, ((1, FB2),), clock_ns=1.0)
+    two = pm.plan_peak_power_mw(32, 32, cfgs, clock_ns=1.0)
+    assert two == pytest.approx(2 * one)
+
+
+def test_stress_scales_dynamic_energy():
+    base = pm.plan_energy_per_op_pj(32, 32, ((1, FB2),))
+    stressed = pm.plan_energy_per_op_pj(32, 32, ((1, FB2),), stress=1.5)
+    assert stressed == pytest.approx(1.5 * base)
