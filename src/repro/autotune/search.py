@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro import verify
 from repro.core import area_model, power_model, timing_model
 from repro.designs import DesignSpec
 from repro.designs.compile import (_instance_latency, _instance_period,
@@ -31,6 +32,11 @@ def score(spec: DesignSpec, configs) -> Candidate:
     if spec.signed:
         configs = tuple((c, dataclasses.replace(cfg, signed=True))
                         for c, cfg in configs)
+    # static gate: an unprovable candidate never reaches the front (the
+    # per-instance analyses are lru-cached, so sweeping thousands of
+    # candidates re-verifies each distinct design point once)
+    verify.assert_plan(spec.bits_a, spec.bits_b, configs,
+                       spec.throughput)
     bits = _timing_bits(spec)
     stress = 1.0 if spec.clock_ns is None else \
         timing_model.stress("star", bits, spec.clock_ns)

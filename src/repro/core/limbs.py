@@ -35,16 +35,43 @@ RADIX = 1 << RADIX_BITS
 MASK = RADIX - 1
 LIMB_DTYPE = jnp.uint32
 
-# Maximum number of carry-save terms that may be accumulated into one
-# uint32 column before overflow becomes possible.  Each term contributes
-# < 2**16, so 2**16 terms are always safe.  Real designs in this repo
-# accumulate far fewer (2 * n_limbs * CT at most).
-MAX_CARRY_SAVE_TERMS = 1 << RADIX_BITS
+#: Largest value a carry-save column may reach: columns live in uint32.
+U32_MAX = (1 << 32) - 1
 
 
 def n_limbs_for_bits(bits: int) -> int:
     """Number of 16-bit limbs needed to hold ``bits`` bits."""
     return -(-bits // RADIX_BITS)
+
+
+def max_limb_value(bits: int) -> int:
+    """Worst-case value of any single limb of a ``bits``-bit operand.
+
+    Full limbs reach MASK; a lone partial top limb reaches 2**rem - 1.
+    """
+    if bits >= RADIX_BITS:
+        return MASK
+    return (1 << bits) - 1
+
+
+def MAX_SAFE_COLUMN_TERMS(bits_a: int, bits_b: int) -> int:
+    """Carry-save terms one uint32 column can absorb for a bits_a x bits_b
+    design before overflow becomes possible.
+
+    Every term the limb pipeline scatters into a column is the lo or hi
+    half of one limb product (or a complement limb / +1 correction), so
+    it is bounded by ``min(amax * bmax, MASK)`` where amax/bmax are the
+    widest limb values the operands can hold.  The budget is the largest
+    term count whose sum still fits in uint32.
+
+    This is the coarse always-true bound asserted at the carry-save
+    construction sites below; :mod:`repro.verify.intervals` proves the
+    sharp per-column magnitude bound for every design the repo can
+    generate (and ``python -m repro.verify`` sweeps them all).
+    """
+    prod = max_limb_value(bits_a) * max_limb_value(bits_b)
+    term_max = max(min(prod, MASK), prod >> RADIX_BITS, 1)
+    return U32_MAX // term_max
 
 
 def to_limbs(value: int, n_limbs: int) -> np.ndarray:
@@ -112,6 +139,11 @@ def ppm(a: jax.Array, b: jax.Array) -> jax.Array:
     product *without* the final carry-propagating addition.
     """
     la, lb = a.shape[-1], b.shape[-1]
+    # every output column receives at most min(la, lb) lo halves plus
+    # min(la, lb) hi halves; the budget is checked at trace time (static)
+    assert 2 * min(la, lb) <= MAX_SAFE_COLUMN_TERMS(la * RADIX_BITS,
+                                                    lb * RADIX_BITS), \
+        f"{la}x{lb}-limb PPM exceeds the uint32 carry-save term budget"
     prod = a[..., :, None] * b[..., None, :]        # exact: <2**32
     lo = (prod & MASK).reshape(*prod.shape[:-2], la * lb)
     hi = (prod >> RADIX_BITS).reshape(*prod.shape[:-2], la * lb)
@@ -140,6 +172,11 @@ def compress(terms, width: int) -> jax.Array:
     4:2 / 5:2 compressor analogue: pure column addition, no carry
     propagation.  Shifts are static.
     """
+    # each summand vector may itself hold column sums, so the coarse
+    # budget only bounds the vector count here; repro.verify.intervals
+    # proves the sharp per-column magnitude bound per design
+    assert len(terms) <= MAX_SAFE_COLUMN_TERMS(RADIX_BITS, RADIX_BITS), \
+        f"compress of {len(terms)} terms exceeds the uint32 term budget"
     batch = jnp.broadcast_shapes(*[t[0].shape[:-1] for t in terms])
     acc = jnp.zeros(batch + (width,), dtype=LIMB_DTYPE)
     for cols, shift in terms:

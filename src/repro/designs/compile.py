@@ -27,6 +27,7 @@ from repro.core.bank import Bank, BankReport, StreamingScheduler, \
 from repro.core.mcim import MCIMConfig
 from repro.core import area_model
 from repro.core import power_model
+from repro import verify
 
 from .spec import DesignSpec, DesignError, TimingError, LatencyError
 
@@ -293,6 +294,10 @@ def _plan_with_timing(spec: DesignSpec):
         plan = dataclasses.replace(plan, configs=tuple(
             (count, dataclasses.replace(cfg, signed=True))
             for count, cfg in plan.configs))
+    # static verification gate: a plan the interval/contract analyzers
+    # cannot prove overflow-safe and schedule-conformant never compiles
+    verify.assert_plan(spec.bits_a, spec.bits_b, plan.configs,
+                       plan.throughput)
     return plan, fallback
 
 
@@ -382,6 +387,10 @@ def compile_plan(spec: DesignSpec, configs, mesh=None) -> CompiledDesign:
         if lat > spec.latency_budget:
             raise LatencyError(f"explicit configs need {lat} cycles, "
                                f"over the budget of {spec.latency_budget}")
+    # same static gate generate() applies: explicit instance lists must
+    # prove safe before a bank is built around them
+    verify.assert_plan(spec.bits_a, spec.bits_b, plan.configs,
+                       plan.throughput)
     backend = _resolve_backend(spec)
     bank = Bank(plan, spec.bits_a, spec.bits_b, backend=backend,
                 scheduler=spec.scheduler)

@@ -22,17 +22,14 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import limbs as L
 
-MASK = L.MASK
-RADIX_BITS = L.RADIX_BITS
-
 
 def _ppm_cols(a, b, la, lb, width):
     """Half-width PPM: (TB, la) x (TB, lb) -> (TB, width) column sums."""
     acc = jnp.zeros((a.shape[0], width), jnp.uint32)
     for j in range(lb):
         p = a * b[:, j:j + 1]
-        acc = acc.at[:, j:j + la].add(p & MASK)
-        acc = acc.at[:, j + 1:j + la + 1].add(p >> RADIX_BITS)
+        acc = acc.at[:, j:j + la].add(p & L.MASK)
+        acc = acc.at[:, j + 1:j + la + 1].add(p >> L.RADIX_BITS)
     return acc
 
 
@@ -41,8 +38,8 @@ def _carry_propagate(cols, out_limbs):
     outs = []
     for k in range(out_limbs):
         tot = (cols[:, k] if k < cols.shape[1] else 0) + carry
-        outs.append(tot & MASK)
-        carry = tot >> RADIX_BITS
+        outs.append(tot & L.MASK)
+        carry = tot >> L.RADIX_BITS
     return jnp.stack(outs, axis=1)
 
 
@@ -75,7 +72,7 @@ def _kara_kernel(a_ref, b_ref, out_ref, *, n, half):
     take2 = min(2 * hp, width - half)
     acc = acc.at[:, half:half + take2].add(t2[:, :take2])
     # two's complement of (T0 + T1) << h: NOT every column + 2
-    neg = jnp.full((tb, width), jnp.uint32(2 * MASK), jnp.uint32)
+    neg = jnp.full((tb, width), jnp.uint32(2 * L.MASK), jnp.uint32)
     take1 = min(2 * half, width - half)
     neg = neg.at[:, half:half + take1].add(
         -(t0[:, :take1] + t1[:, :take1]))

@@ -25,6 +25,7 @@ folded datapath, i.e. many independent multiplications share one
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -32,10 +33,61 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# single source of truth for MASK / RADIX_BITS / LIMB_DTYPE: core.limbs
+# (the verifier's interval bounds are authoritative only because every
+# kernel shares the core constants instead of re-declaring them)
 from repro.core import limbs as L
 
-MASK = L.MASK
-RADIX_BITS = L.RADIX_BITS
+
+@dataclasses.dataclass(frozen=True)
+class FoldGeometry:
+    """Static shape contract of one folded schedule.
+
+    Derived in exactly one place so the kernel plumbing, the VMEM
+    area model (:func:`.ops.vmem_bytes_per_step`) and the static
+    verifier (:mod:`repro.verify.contracts`) can never disagree.
+    """
+    schedule: str       # fb | ff | karatsuba
+    la: int             # A limbs
+    lb: int             # B limbs
+    chunk: int          # B limbs consumed per grid cycle
+    ct_run: int         # grid cycles actually folded (<= requested CT)
+    scratch_width: int  # VMEM accumulator columns
+    out_width: int      # retired product limbs
+
+    @property
+    def b_windows(self) -> tuple:
+        """Per-cycle (lo, hi) B-limb windows the PPM consumes (fb/ff)."""
+        return tuple((t * self.chunk, (t + 1) * self.chunk)
+                     for t in range(self.ct_run))
+
+
+def fold_geometry(la: int, lb: int, ct: int,
+                  schedule: str = "fb") -> FoldGeometry:
+    """Static geometry of a folded schedule for (LA, LB) limb operands."""
+    if schedule == "karatsuba":
+        if ct != 3:
+            raise ValueError("the folded Karatsuba schedule is fixed to CT=3")
+        n = max(la, lb)
+        n += n % 2                               # even split point
+        return FoldGeometry(schedule=schedule, la=la, lb=lb,
+                            chunk=n // 2 + 1, ct_run=3,
+                            scratch_width=2 * n, out_width=la + lb)
+    if schedule not in ("fb", "ff"):
+        raise ValueError(f"schedule must be fb, ff or karatsuba, "
+                         f"got {schedule!r}")
+    chunk = -(-lb // ct)
+    # CT > LB leaves trailing all-zero chunks: fold only the LB real
+    # limbs (the silicon would idle those cycles; the extra cycles exist
+    # in the throughput accounting, not in the datapath).
+    ct_run = -(-lb // chunk)
+    if schedule == "fb":
+        scratch = la + chunk + 1                 # M + N/CT folded window
+    else:
+        scratch = la + ct_run * chunk + 1        # full FF register file
+    return FoldGeometry(schedule=schedule, la=la, lb=lb, chunk=chunk,
+                        ct_run=ct_run, scratch_width=scratch,
+                        out_width=la + lb)
 
 
 def _fb_kernel(a_ref, b_ref, out_ref, acc_ref, *, la, lb, ct, chunk):
@@ -64,8 +116,8 @@ def _fb_kernel(a_ref, b_ref, out_ref, acc_ref, *, la, lb, ct, chunk):
     acc = acc_ref[...]
     for jj in range(chunk):
         p = a * b[:, jj:jj + 1]                           # exact 16x16 in u32
-        lo = p & MASK
-        hi = p >> RADIX_BITS
+        lo = p & L.MASK
+        hi = p >> L.RADIX_BITS
         acc = acc.at[:, jj:jj + la].add(lo)
         acc = acc.at[:, jj + 1:jj + la + 1].add(hi)
 
@@ -74,8 +126,8 @@ def _fb_kernel(a_ref, b_ref, out_ref, acc_ref, *, la, lb, ct, chunk):
     norm = []
     for k in range(width):
         tot = acc[:, k] + carry
-        norm.append(tot & MASK)
-        carry = tot >> RADIX_BITS
+        norm.append(tot & L.MASK)
+        carry = tot >> L.RADIX_BITS
     normalized = jnp.stack(norm, axis=1)
     acc_ref[...] = normalized
 
@@ -116,8 +168,8 @@ def _ff_kernel(a_ref, b_ref, out_ref, acc_ref, *, la, lb, ct, chunk):
     cols = jnp.zeros((a.shape[0], la + chunk + 1), jnp.uint32)
     for jj in range(chunk):
         p = a * b[:, jj:jj + 1]                           # exact 16x16 in u32
-        cols = cols.at[:, jj:jj + la].add(p & MASK)
-        cols = cols.at[:, jj + 1:jj + la + 1].add(p >> RADIX_BITS)
+        cols = cols.at[:, jj:jj + la].add(p & L.MASK)
+        cols = cols.at[:, jj + 1:jj + la + 1].add(p >> L.RADIX_BITS)
 
     # ---- 2*CT:2 compressor: add into the register file at j*chunk -------
     window = acc_ref[:, pl.dslice(j * chunk, la + chunk + 1)]
@@ -131,8 +183,8 @@ def _ff_kernel(a_ref, b_ref, out_ref, acc_ref, *, la, lb, ct, chunk):
         norm = []
         for k in range(la + lb):
             tot = (acc[:, k] if k < width else jnp.zeros_like(carry)) + carry
-            norm.append(tot & MASK)
-            carry = tot >> RADIX_BITS
+            norm.append(tot & L.MASK)
+            carry = tot >> L.RADIX_BITS
         out_ref[...] = jnp.stack(norm, axis=1)
 
 
@@ -143,8 +195,8 @@ def _kara_carry(cols, out_limbs):
     for k in range(out_limbs):
         tot = (cols[:, k] if k < cols.shape[1]
                else jnp.zeros_like(carry)) + carry
-        outs.append(tot & MASK)
-        carry = tot >> RADIX_BITS
+        outs.append(tot & L.MASK)
+        carry = tot >> L.RADIX_BITS
     return jnp.stack(outs, axis=1)
 
 
@@ -190,8 +242,8 @@ def _kara_kernel(a_ref, b_ref, out_ref, acc_ref, *, la, lb, n, half):
     cols = jnp.zeros((tb, 2 * hp), jnp.uint32)
     for jj in range(hp):
         p = av * bv[:, jj:jj + 1]                         # exact 16x16 in u32
-        cols = cols.at[:, jj:jj + hp].add(p & MASK)
-        cols = cols.at[:, jj + 1:jj + hp + 1].add(p >> RADIX_BITS)
+        cols = cols.at[:, jj:jj + hp].add(p & L.MASK)
+        cols = cols.at[:, jj + 1:jj + hp + 1].add(p >> L.RADIX_BITS)
     t = _kara_carry(cols, 2 * hp)
 
     def place(shift):
@@ -203,7 +255,7 @@ def _kara_kernel(a_ref, b_ref, out_ref, acc_ref, *, la, lb, n, half):
     def neg_place(shift):
         # NOT+1 two's complement of (T_j << shift) mod 2**(16*width);
         # the +1 is returned as a separate column-0 increment
-        inv = jnp.full((tb, width), jnp.uint32(MASK)) - place(shift)
+        inv = jnp.full((tb, width), jnp.uint32(L.MASK)) - place(shift)
         return inv.at[:, 0].add(1)
 
     # compressor feedback: accumulate this cycle's placed terms
@@ -226,21 +278,21 @@ def _kara_fold_call(a, b, tile_b, interpret):
     """pallas_call plumbing for the folded Karatsuba CT=3 schedule."""
     bsz, la = a.shape
     lb = b.shape[-1]
-    n = max(la, lb)
-    n += n % 2                                  # even split point
+    geo = fold_geometry(la, lb, 3, "karatsuba")
+    n = geo.scratch_width // 2                  # operands padded even
     a = jnp.pad(a, ((0, 0), (0, n - la)))
     b = jnp.pad(b, ((0, 0), (0, n - lb)))
     kernel = functools.partial(_kara_kernel, la=la, lb=lb, n=n, half=n // 2)
     return pl.pallas_call(
         kernel,
-        grid=(bsz // tile_b, 3),
+        grid=(bsz // tile_b, geo.ct_run),
         in_specs=[
             pl.BlockSpec((tile_b, n), lambda i, j: (i, 0)),
             pl.BlockSpec((tile_b, n), lambda i, j: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((tile_b, la + lb), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bsz, la + lb), jnp.uint32),
-        scratch_shapes=[pltpu.VMEM((tile_b, 2 * n), jnp.uint32)],
+        out_specs=pl.BlockSpec((tile_b, geo.out_width), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, geo.out_width), jnp.uint32),
+        scratch_shapes=[pltpu.VMEM((tile_b, geo.scratch_width), jnp.uint32)],
         interpret=interpret,
     )(a, b)
 
@@ -276,24 +328,15 @@ def mcim_fold_mul(a: jax.Array, b: jax.Array, *, ct: int = 2,
         raise ValueError("FF is a multi-cycle design: ct >= 2")
     bsz, la = a.shape
     lb = b.shape[-1]
-    chunk = -(-lb // ct)
-    # CT > LB leaves trailing all-zero chunks: fold only the LB real
-    # limbs (the silicon would idle those cycles; the extra cycles exist
-    # in the throughput accounting, not in the datapath).
-    ct_run = -(-lb // chunk)
+    geo = fold_geometry(la, lb, ct, schedule)
+    chunk, ct_run = geo.chunk, geo.ct_run
     b = jnp.pad(b, ((0, 0), (0, chunk * ct_run - lb)))
     tile_b = min(tile_b, bsz)
     if bsz % tile_b:
         raise ValueError(f"batch {bsz} not divisible by tile {tile_b}")
 
-    if schedule == "fb":
-        kernel = functools.partial(_fb_kernel, la=la, lb=lb, ct=ct_run,
-                                   chunk=chunk)
-        scratch_width = la + chunk + 1          # M + N/CT folded window
-    else:
-        kernel = functools.partial(_ff_kernel, la=la, lb=lb, ct=ct_run,
-                                   chunk=chunk)
-        scratch_width = la + ct_run * chunk + 1  # full FF register file
+    body = _fb_kernel if schedule == "fb" else _ff_kernel
+    kernel = functools.partial(body, la=la, lb=lb, ct=ct_run, chunk=chunk)
     return pl.pallas_call(
         kernel,
         grid=(bsz // tile_b, ct_run),
@@ -301,8 +344,8 @@ def mcim_fold_mul(a: jax.Array, b: jax.Array, *, ct: int = 2,
             pl.BlockSpec((tile_b, la), lambda i, j: (i, 0)),
             pl.BlockSpec((tile_b, chunk), lambda i, j: (i, j)),
         ],
-        out_specs=pl.BlockSpec((tile_b, la + lb), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bsz, la + lb), jnp.uint32),
-        scratch_shapes=[pltpu.VMEM((tile_b, scratch_width), jnp.uint32)],
+        out_specs=pl.BlockSpec((tile_b, geo.out_width), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, geo.out_width), jnp.uint32),
+        scratch_shapes=[pltpu.VMEM((tile_b, geo.scratch_width), jnp.uint32)],
         interpret=interpret,
     )(a, b)

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import limbs as L
-from .kernel import mcim_fold_mul
+from .kernel import mcim_fold_mul, fold_geometry
 from .ref import mcim_fold_mul_ref
 
 # On this (CPU) container the kernel always runs in interpret mode; on a
@@ -74,17 +74,15 @@ def vmem_bytes_per_step(la: int, lb: int, ct: int, tile_b: int,
     its saving is vs the *spatial* Karatsuba (three PPM windows at
     once), not vs Star.
     """
+    geo = fold_geometry(la, lb, 3 if schedule == "karatsuba" else ct,
+                        schedule)
     if schedule == "karatsuba":
-        n = max(la, lb)
-        n += n % 2
-        hp = n // 2 + 1
+        hp = geo.chunk                  # half-width PPM port (n/2 + 1)
         words = tile_b * (2 * hp        # this cycle's operand port pair
                           + 2 * hp      # shared PPM window (T_j columns)
-                          + 2 * n)      # compressor feedback accumulator
+                          + geo.scratch_width)  # compressor feedback acc
         return words * 4
-    chunk = -(-lb // ct)
-    acc = (la + ct * chunk + 1) if schedule == "ff" else (la + chunk + 1)
-    words = tile_b * (la              # A tile
-                      + chunk         # B chunk
-                      + acc)          # accumulator window / register file
+    words = tile_b * (geo.la          # A tile
+                      + geo.chunk     # B chunk
+                      + geo.scratch_width)  # acc window / register file
     return words * 4

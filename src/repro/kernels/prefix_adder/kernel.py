@@ -25,21 +25,18 @@ from jax.experimental import pallas as pl
 
 from repro.core import limbs as L
 
-MASK = L.MASK
-RADIX_BITS = L.RADIX_BITS
-
 
 def _adder_kernel(cols_ref, out_ref, *, width):
     cols = cols_ref[...]                          # (TB, W) uint32 columns
     # phase 1: fold high halves once; limbs now < 2^17
-    digit = cols & MASK
-    high = cols >> RADIX_BITS
+    digit = cols & L.MASK
+    high = cols >> L.RADIX_BITS
     limb = digit.at[:, 1:].add(high[:, :-1])      # may reach 2^17 - 1
 
     # initial generate/propagate per limb position
-    g = (limb >> RADIX_BITS).astype(jnp.uint32)   # carry-out regardless
-    p = ((limb & MASK) == MASK).astype(jnp.uint32)  # propagates carry-in
-    base = limb & MASK
+    g = (limb >> L.RADIX_BITS).astype(jnp.uint32)   # carry-out regardless
+    p = ((limb & L.MASK) == L.MASK).astype(jnp.uint32)  # propagates carry-in
+    base = limb & L.MASK
 
     # phase 2: Kogge-Stone/Brent-Kung combine: (g,p) o (g',p')
     shift = 1
@@ -52,7 +49,7 @@ def _adder_kernel(cols_ref, out_ref, *, width):
         shift *= 2
     # carry INTO position k = combined generate of positions < k
     carry_in = jnp.pad(gk, ((0, 0), (1, 0)))[:, :width]
-    out_ref[...] = (base + carry_in) & MASK
+    out_ref[...] = (base + carry_in) & L.MASK
 
 
 @functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))

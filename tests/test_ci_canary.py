@@ -50,3 +50,16 @@ def test_pinned_jax_hlo_dialect_parses():
     res = hlo_cost.analyze(txt)
     assert res["flops"] == 2 * m * k * n, (
         "hlo_cost no longer parses this jax's optimized HLO dialect")
+
+
+def test_pinned_jax_hlo_dialect_parses_chained_dots():
+    """Second dialect probe (re-validated at the 0.4.37 pin): chained
+    contractions must each be found -- a parser that silently drops
+    every dot but the first would still pass the single-dot probe."""
+    from repro.launch import hlo_cost
+    m = 32
+    a = jax.ShapeDtypeStruct((m, m), jnp.float32)
+    txt = jax.jit(lambda x: (x @ x) @ x).lower(a).compile().as_text()
+    res = hlo_cost.analyze(txt)
+    assert res["flops"] == 2 * (2 * m * m * m), (
+        "hlo_cost missed a contraction in this jax's optimized HLO")

@@ -1,0 +1,366 @@
+"""Tests for repro.verify: interval analysis, contracts, lint, CLI gate."""
+import dataclasses
+import json
+import subprocess
+import sys
+from fractions import Fraction
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import limbs as L
+from repro.core import planner
+from repro.core.mcim import MCIMConfig
+from repro import verify
+from repro.verify import contracts, intervals, lint
+from repro.designs import DesignSpec, generate, registry
+from repro.kernels.mcim_fold import fold_geometry
+
+SRC_ROOT = Path(__file__).resolve().parent.parent / "src" / "repro"
+
+
+# ------------------------------------------------------------ acceptance
+
+@pytest.mark.parametrize("name", registry.names())
+def test_analyzer_accepts_every_registered_design(name):
+    """Every named design must prove safe -- generate() would raise
+    otherwise, since the gate runs at plan time."""
+    design = generate(name)
+    assert verify.verify_design(design) == ()
+
+
+@pytest.mark.parametrize("arch,ct,levels,adder", [
+    ("star", 1, 1, "1ca"),
+    ("fb", 2, 1, "1ca"), ("fb", 12, 1, "1ca"),
+    ("ff", 2, 1, "1ca"), ("ff", 6, 1, "1ca"),
+    ("karatsuba", 3, 1, "1ca"), ("karatsuba", 3, 3, "3ca"),
+])
+@pytest.mark.parametrize("bits", [8, 32, 128])
+def test_vocabulary_proves_safe_on_both_substrates(arch, ct, levels,
+                                                   adder, bits):
+    cfg = MCIMConfig(arch=arch, ct=ct, levels=levels, adder=adder)
+    for substrate in ("core", "kernel"):
+        rep = intervals.analyze(bits, bits, cfg, substrate=substrate)
+        assert rep.ok, rep.violations
+        assert rep.headroom_bits > 0
+        assert rep.max_column <= L.U32_MAX
+
+
+def test_signed_wrapper_proves_safe():
+    cfg = MCIMConfig(arch="fb", ct=2, signed=True)
+    assert verify.verify_instance(32, 32, cfg) == ()
+
+
+# --------------------------------------------- seeded counterexamples
+
+def test_rejects_scratch_one_column_too_narrow():
+    """Counterexample 1: a kernel declaring one fewer scratch column
+    than the interval analysis requires must be rejected."""
+    cfg = MCIMConfig(arch="fb", ct=2)
+    required = intervals.required_scratch_width(32, 32, cfg)
+    ok = contracts.check_widths(32, 32, cfg)
+    assert ok == []
+    bad = contracts.check_widths(32, 32, cfg, scratch_width=required - 1)
+    assert any(v.rule == "scratch-too-narrow" for v in bad)
+
+
+def test_rejects_double_covering_schedule():
+    """Counterexample 2: a schedule whose cycle windows overlap
+    accumulates a partial product twice."""
+    la = lb = L.n_limbs_for_bits(32)
+    geo = fold_geometry(la, lb, 2, "fb")
+    assert contracts.check_coverage(32, 32, MCIMConfig(arch="fb",
+                                                       ct=2)) == []
+    # corrupt: second window re-reads the first window's last limb
+    bad_windows = (geo.b_windows[0],
+                   (geo.b_windows[1][0] - 1, geo.b_windows[1][1]))
+    bad = contracts.check_coverage(32, 32, MCIMConfig(arch="fb", ct=2),
+                                   windows=bad_windows)
+    assert any(v.rule == "double-cover" for v in bad)
+
+
+def test_rejects_undercovering_schedule():
+    la = lb = L.n_limbs_for_bits(64)
+    geo = fold_geometry(la, lb, 2, "fb")
+    bad_windows = geo.b_windows[:-1]            # last chunk never runs
+    bad = contracts.check_coverage(64, 64, MCIMConfig(arch="fb", ct=2),
+                                   windows=bad_windows)
+    assert any(v.rule == "missing-product" for v in bad)
+
+
+def test_interval_analyzer_detects_overflowing_design():
+    """A pathological design point the analyzer must refute: compress
+    bounds past uint32 are reported, not silently accepted."""
+    ctx = intervals._Ctx()
+    huge = [L.U32_MAX] * 4
+    intervals.compress_bounds([(huge, 0), (huge, 0)], 4, ctx, "seeded")
+    assert ctx.violations
+    assert all(v.rule == "u32-overflow" for v in ctx.violations)
+
+
+def test_throughput_sum_mismatch_detected():
+    configs = ((1, MCIMConfig(arch="star", ct=1)),
+               (1, MCIMConfig(arch="fb", ct=2)))
+    assert contracts.check_throughput(configs, Fraction(3, 2)) == []
+    bad = contracts.check_throughput(configs, Fraction(7, 4))
+    assert any(v.rule == "throughput-sum" for v in bad)
+
+
+def test_assert_plan_raises_with_structured_violations():
+    configs = ((1, MCIMConfig(arch="fb", ct=2)),)
+    with pytest.raises(verify.VerificationError) as e:
+        verify.assert_plan(32, 32, configs, Fraction(1, 3))
+    assert e.value.violations
+    assert any(v.rule == "throughput-sum" for v in e.value.violations)
+
+
+# -------------------------------------------------- plan-time gating
+
+def test_generate_calls_the_verifier(monkeypatch):
+    """generate() must route every plan through verify.assert_plan."""
+    calls = []
+    real = verify.assert_plan
+
+    def spy(bits_a, bits_b, configs, throughput=None):
+        calls.append((bits_a, bits_b, tuple(configs), throughput))
+        return real(bits_a, bits_b, configs, throughput)
+
+    monkeypatch.setattr(verify, "assert_plan", spy)
+    design = generate(DesignSpec(32, 32, Fraction(1, 2)))
+    assert calls, "generate() never invoked the static verifier"
+    bits_a, bits_b, configs, tp = calls[0]
+    assert (bits_a, bits_b) == (32, 32)
+    assert configs == design.plan.configs
+    assert tp == design.plan.throughput
+
+
+def test_autotune_score_calls_the_verifier(monkeypatch):
+    import importlib
+    search_mod = importlib.import_module("repro.autotune.search")
+    calls = []
+    monkeypatch.setattr(verify, "assert_plan",
+                        lambda *a, **k: calls.append(a))
+    spec = DesignSpec(16, 16, Fraction(1, 2))
+    search_mod.score(spec, ((1, MCIMConfig(arch="fb", ct=2)),))
+    assert calls
+
+
+# -------------------------------------------------- interval soundness
+
+def _concrete_ppm_columns(a_int, b_int, bits):
+    n = L.n_limbs_for_bits(bits)
+    a = L.to_limbs(a_int, n)
+    b = L.to_limbs(b_int, n)
+    cols = [0] * (2 * n)
+    for i in range(n):
+        for j in range(n):
+            p = int(a[i]) * int(b[j])
+            cols[i + j] += p & L.MASK
+            cols[i + j + 1] += p >> L.RADIX_BITS
+    return cols
+
+
+@pytest.mark.parametrize("bits", [8, 16, 32, 128])
+def test_ppm_bounds_dominate_random_batches(bits):
+    """The abstract PPM bounds dominate concrete column sums for random
+    operand batches (the soundness property, numpy edition)."""
+    bound = intervals.ppm_bounds(intervals.operand_bounds(bits),
+                                 intervals.operand_bounds(bits))
+    rng = np.random.default_rng(7)
+    hi = (1 << bits) - 1
+    for _ in range(50):
+        a = int(rng.integers(0, hi, dtype=np.uint64)) if bits <= 63 \
+            else int.from_bytes(rng.bytes(bits // 8), "little")
+        b = int(rng.integers(0, hi, dtype=np.uint64)) if bits <= 63 \
+            else int.from_bytes(rng.bytes(bits // 8), "little")
+        cols = _concrete_ppm_columns(a % (1 << bits), b % (1 << bits),
+                                     bits)
+        assert all(c <= m for c, m in zip(cols, bound))
+    # the bound is tight in column 0: all-ones narrow operands reach
+    # min(p_max, MASK) directly; wider ones via a full limb times 1
+    if bits < L.RADIX_BITS:
+        cols = _concrete_ppm_columns((1 << bits) - 1, (1 << bits) - 1,
+                                     bits)
+    else:
+        cols = _concrete_ppm_columns(L.MASK, 1, bits)
+    assert cols[0] == bound[0]
+
+
+def test_hypothesis_property_no_batch_exceeds_bounds():
+    """Hypothesis edition of the soundness property (skipped when the
+    container lacks hypothesis)."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(st.integers(min_value=0, max_value=(1 << 32) - 1),
+               st.integers(min_value=0, max_value=(1 << 32) - 1))
+    @hyp.settings(max_examples=200, deadline=None)
+    def prop(a, b):
+        bound = intervals.ppm_bounds(intervals.operand_bounds(32),
+                                     intervals.operand_bounds(32))
+        cols = _concrete_ppm_columns(a, b, 32)
+        assert all(c <= m for c, m in zip(cols, bound))
+
+    prop()
+
+
+def test_required_width_matches_kernel_geometry():
+    """The analyzer's required width never exceeds what the kernels
+    declare -- for every (arch, ct, width) the kernels implement."""
+    for bits in (8, 32, 64, 128):
+        la = lb = L.n_limbs_for_bits(bits)
+        for ct in (2, 3, 4, 6, 8, 12):
+            for arch in ("fb", "ff"):
+                cfg = MCIMConfig(arch=arch, ct=ct)
+                req = intervals.required_scratch_width(bits, bits, cfg)
+                geo = fold_geometry(la, lb, ct, arch)
+                assert req <= geo.scratch_width
+        cfg = MCIMConfig(arch="karatsuba", ct=3)
+        req = intervals.required_scratch_width(bits, bits, cfg)
+        geo = fold_geometry(la, lb, 3, "karatsuba")
+        assert req <= geo.scratch_width
+
+
+def test_max_safe_column_terms_helper():
+    """The exported budget helper: 16x16 full-width terms cap at
+    2*min(la, lb) per column, which every repo width respects."""
+    # full 16-bit limbs: the worst term is a lo half capped at MASK
+    assert L.MAX_SAFE_COLUMN_TERMS(16, 16) == L.U32_MAX // L.MASK
+    # 128x128b (8x8 limbs): 16 terms/column needed, budget must cover it
+    assert 2 * 8 <= L.MAX_SAFE_COLUMN_TERMS(128, 128)
+    # narrow operands leave a far larger budget
+    assert L.MAX_SAFE_COLUMN_TERMS(4, 4) > L.MAX_SAFE_COLUMN_TERMS(16, 16)
+
+
+# --------------------------------------------------------------- lint
+
+def test_lint_clean_on_repo_tree():
+    violations = lint.lint_tree(SRC_ROOT)
+    assert violations == [], "\n".join(v.describe() for v in violations)
+
+
+def test_lint_flags_traced_branch_and_cast():
+    bad = (
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x, y):\n"
+        "    if x > 0:\n"
+        "        return y\n"
+        "    return y * int(x)\n")
+    rules = {v.rule for v in lint.lint_source(bad, "bad.py")}
+    assert "traced-branch" in rules
+    assert "python-int-cast" in rules
+
+
+def test_lint_flags_annotated_array_loop_and_ternary():
+    bad = (
+        "import jax\n"
+        "def f(x: jax.Array, n: int):\n"
+        "    for v in x:\n"
+        "        pass\n"
+        "    return 1 if x else 0\n")
+    rules = {v.rule for v in lint.lint_source(bad, "bad.py")}
+    assert "traced-loop" in rules
+    assert "traced-ternary" in rules
+
+
+def test_lint_static_attrs_launder_taint():
+    good = (
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    if x.ndim == 1:\n"
+        "        return x\n"
+        "    n = int(x.shape[0])\n"
+        "    m = len(x)\n"
+        "    if n > m:\n"
+        "        return x\n"
+        "    return x\n")
+    assert lint.lint_source(good, "good.py") == []
+
+
+def test_lint_respects_static_argnames():
+    good = (
+        "import functools, jax\n"
+        "@functools.partial(jax.jit, static_argnames=('ct',))\n"
+        "def f(x, ct):\n"
+        "    if ct > 2:\n"
+        "        return x\n"
+        "    return x + 1\n")
+    assert lint.lint_source(good, "good.py") == []
+
+
+def test_lint_flags_scheduler_state():
+    bad = (
+        "class CountingScheduler:\n"
+        "    def schedule(self, cts, n_ops):\n"
+        "        self.calls = getattr(self, 'calls', 0) + 1\n"
+        "        return ((), 0)\n")
+    rules = {v.rule for v in lint.lint_source(bad, "bad.py")}
+    assert "scheduler-state" in rules
+
+
+# --------------------------------------------------- scheduler contracts
+
+def test_all_registered_schedulers_meet_contracts():
+    assert contracts.check_all_schedulers() == []
+
+
+def test_scheduler_contract_rejects_incomplete_assignment():
+    @dataclasses.dataclass(frozen=True)
+    class DropsLastOp:
+        name: str = "drops_last"
+
+        def schedule(self, cts, n_ops):
+            ops = tuple(range(max(n_ops - 1, 0)))    # drops op n-1
+            return (ops,) + ((),) * (len(cts) - 1), len(ops) * cts[0]
+
+    bad = contracts.check_scheduler(DropsLastOp(), (1, 2), 5)
+    assert any(v.rule == "scheduler-coverage" for v in bad)
+
+
+def test_bank_dispatch_is_static():
+    plan = planner.plan_throughput(32, 32, Fraction(7, 2))
+    assert contracts.check_bank_static(plan, 32, 32) == []
+
+
+# ----------------------------------------------------------------- CLI
+
+def test_cli_smoke_writes_report_and_exits_zero(tmp_path):
+    out = tmp_path / "VERIFY_report.json"
+    env_src = str(Path(__file__).resolve().parent.parent / "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.verify", "--smoke",
+         "--out", str(out)],
+        capture_output=True, text=True, timeout=560,
+        env={"PYTHONPATH": env_src, "PATH": "/usr/bin:/bin",
+             "HOME": "/tmp"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    report = json.loads(out.read_text())
+    assert report["summary"]["ok"] is True
+    assert report["summary"]["violations"] == 0
+    # Other test modules may register throwaway "_"-prefixed designs in
+    # this process; the subprocess sees only the shipped registry.
+    shipped = {n for n in registry.names() if not n.startswith("_")}
+    assert {r["design"] for r in report["registry"]} >= shipped
+    assert all(r["ok"] for r in report["vocabulary"])
+
+
+def test_kernel_agrees_with_analyzer_required_width():
+    """End-to-end cross-check: a design the analyzer proves safe
+    multiplies bit-exactly through the kernel substrate."""
+    from repro.kernels.mcim_fold import big_mul
+    rng = np.random.default_rng(11)
+    bits = 64
+    n = L.n_limbs_for_bits(bits)
+    a = L.random_limbs(rng, (8,), bits)
+    b = L.random_limbs(rng, (8,), bits)
+    cfg = MCIMConfig(arch="fb", ct=4)
+    assert verify.verify_instance(bits, bits, cfg) == ()
+    out = np.asarray(big_mul(jnp.asarray(a), jnp.asarray(b), ct=4))
+    for k in range(8):
+        assert L.from_limbs(out[k]) == \
+            L.from_limbs(a[k]) * L.from_limbs(b[k])
