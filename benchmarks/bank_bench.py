@@ -9,7 +9,12 @@ execute a batch through ``core.bank``, and record
   * per-scheduler makespans (round_robin / greedy / streaming) so the
     policy comparison is tracked per PR -- greedy's earliest-completion
     dispatch must never lose to round-robin,
-  * bit-exactness of the executed batch vs the Python-int oracle,
+  * bit-exactness of the executed batch vs the Python-int oracle, on
+    BOTH the core path and the fused megakernel path,
+  * wall clock per execution backend (core / per-instance kernel /
+    fused megakernel): compile cost and steady-state separately, the
+    traced Pallas launch count of one bank round, and the
+    fused-vs-per-instance speedup (the dispatch-tax payoff),
   * the per-step VMEM working set (the TPU 'area') vs the
     round-up-to-integer Star bank,
   * the planner's ASIC-area estimate vs the conventional Star bank.
@@ -20,7 +25,11 @@ artifact carries full, recompilable provenance
 (``DesignSpec.from_dict(row["design_spec"])`` -> the same design).
 
 Emits ``BENCH_bank.json`` (repo root, override with --out) and the
-harness CSV rows.  ``--smoke`` runs a 6-point subset for CI.
+harness CSV rows; the JSON's ``fields`` header documents every
+wall-clock column.  ``--smoke`` runs a 6-point subset for CI and
+additionally ASSERTS the fused contract: launch_count == 1 on every
+point and steady-state speedup >= 1.0 on at least one multi-instance
+point.
 """
 from __future__ import annotations
 
@@ -38,9 +47,37 @@ import jax.numpy as jnp
 from repro import designs
 from repro.core import limbs as L
 from repro.core import planner, bank
+from repro.core.bank import Bank
+from repro.kernels import runtime
 from repro.kernels.mcim_fold import vmem_bytes_per_step
 
 RNG = np.random.default_rng(17)
+
+#: execution backends every design point is timed on
+TIMED_BACKENDS = ("core", "kernel", "fused")
+
+#: documentation of the wall-clock fields, embedded in the JSON header
+FIELDS = {
+    "wall_us_first_call":
+        "wall time of the first execute() call (us): includes trace + "
+        "compile + one run; kept raw so compile cost is reconstructible",
+    "wall_us_steady":
+        "median wall time of 5 post-warmup execute() calls (us): the "
+        "per-batch execution cost",
+    "wall_us_compile":
+        "wall_us_first_call - wall_us_steady, clamped at 0 (us): the "
+        "one-time trace/compile cost a serving process pays once",
+    "launch_count":
+        "Pallas launches one bank round issues, counted in the traced "
+        "jaxpr: 0 on core (pure jnp), one per busy instance on kernel, "
+        "exactly 1 on fused",
+    "fused_speedup_vs_kernel":
+        "kernel wall_us_steady / fused wall_us_steady: >1 means the "
+        "fused megakernel beats the per-instance launch tax",
+    "paths":
+        "per-backend timing dict {core|kernel|fused: {wall_us_*, "
+        "launch_count}}; top-level wall_us_* columns are the core path",
+}
 
 # Paper use cases: pure fractional TPs (one folded instance), the
 # headline TP=3.5 mixed bank, and the Sec. V-B CT combination 5/6.
@@ -61,6 +98,31 @@ def _row(name, us, derived):
     print(f"{name},{us:.2f},{derived}")
 
 
+def _time_path(bk: Bank, a, b) -> dict:
+    """Wall-clock one backend path: first call, steady median, compile.
+
+    The old ``wall_us_first_call`` column conflated compile and run
+    time; ``wall_us_compile`` is the split-out one-time cost (first
+    minus steady, clamped at 0 for paths whose first call happens to
+    race under the median).
+    """
+    t0 = time.perf_counter()
+    out = bk.execute(a, b)
+    jax.block_until_ready(out)
+    first = (time.perf_counter() - t0) * 1e6
+    steady = []
+    for _ in range(5):
+        t0 = time.perf_counter()
+        jax.block_until_ready(bk.execute(a, b))
+        steady.append((time.perf_counter() - t0) * 1e6)
+    steady_us = float(np.median(steady))
+    return {
+        "wall_us_first_call": first,
+        "wall_us_steady": steady_us,
+        "wall_us_compile": max(first - steady_us, 0.0),
+    }, out
+
+
 def run_design_point(bits: int, tp: Fraction, batch_mult: int = 4) -> dict:
     spec = designs.DesignSpec(bits, bits, tp, backend="core")
     design = designs.generate(spec)
@@ -69,23 +131,27 @@ def run_design_point(bits: int, tp: Fraction, batch_mult: int = 4) -> dict:
 
     a = jnp.asarray(L.random_limbs(RNG, (batch,), bits))
     b = jnp.asarray(L.random_limbs(RNG, (batch,), bits))
-    t0 = time.perf_counter()
-    out = bk.execute(a, b)
-    jax.block_until_ready(out)
-    wall_us = (time.perf_counter() - t0) * 1e6
-    # steady state: first call pays tracing/compilation; report the
-    # post-warmup median separately so the artifact separates compile
-    # cost from per-batch execution cost
-    steady = []
-    for _ in range(5):
-        t0 = time.perf_counter()
-        jax.block_until_ready(bk.execute(a, b))
-        steady.append((time.perf_counter() - t0) * 1e6)
-    wall_us_steady = float(np.median(steady))
 
     expect = [L.from_limbs(np.asarray(x)) * L.from_limbs(np.asarray(y))
               for x, y in zip(a, b)]
-    exact = L.batch_from_limbs(np.asarray(out)) == expect
+
+    # every execution backend over the SAME plan/batch: core (pure
+    # jnp), per-instance Pallas launches, and the fused megakernel
+    paths = {}
+    exact = fused_exact = False
+    for name in TIMED_BACKENDS:
+        pbk = bk if name == "core" else Bank(plan, bits, bits,
+                                             backend=name)
+        timing, out = _time_path(pbk, a, b)
+        timing["launch_count"] = pbk.launch_count(batch)
+        paths[name] = timing
+        got = L.batch_from_limbs(np.asarray(out)) == expect
+        if name == "core":
+            exact = got
+        elif name == "fused":
+            fused_exact = got
+    fused_speedup = (paths["kernel"]["wall_us_steady"] /
+                     paths["fused"]["wall_us_steady"])
 
     rep = bk.last_report
     # scheduler policy comparison on the same (cts, batch) instance set;
@@ -126,6 +192,7 @@ def run_design_point(bits: int, tp: Fraction, batch_mult: int = 4) -> dict:
         "streaming_arrival_rate": rate,
         "greedy_vs_round_robin": makespans["greedy"] / makespans["round_robin"],
         "bit_exact": bool(exact),
+        "fused_bit_exact": bool(fused_exact),
         "working_set_bytes": rep.working_set_bytes,
         "star_bank_working_set_bytes": star_ws,
         "working_set_saving": 1 - rep.working_set_bytes / star_ws,
@@ -134,9 +201,42 @@ def run_design_point(bits: int, tp: Fraction, batch_mult: int = 4) -> dict:
         "area_saving": 1 - plan.area / conv_area,
         "energy_per_op_pj": design.energy_per_op_pj,
         "peak_power_mw": design.peak_power_mw,
-        "wall_us_first_call": wall_us,
-        "wall_us_steady": wall_us_steady,
+        # top-level wall-clock columns = the core path (see FIELDS)
+        "wall_us_first_call": paths["core"]["wall_us_first_call"],
+        "wall_us_compile": paths["core"]["wall_us_compile"],
+        "wall_us_steady": paths["core"]["wall_us_steady"],
+        "paths": paths,
+        "launch_count": {name: p["launch_count"]
+                         for name, p in paths.items()},
+        "fused_speedup_vs_kernel": fused_speedup,
+        "n_instances": len(bk.instances),
     }
+
+
+def _assert_fused_smoke(results) -> None:
+    """The CI fused contract: one launch everywhere, a real speedup
+    somewhere.
+
+    Every point's fused path must trace to exactly one Pallas launch;
+    and on at least one multi-instance point the fused steady-state
+    must beat (or tie) the per-instance kernel path -- interpret-mode
+    wall clock is noisy per point, so the speedup gate takes the max
+    over the multi-instance subset rather than demanding every point
+    win.
+    """
+    bad = [(r["bits"], r["tp"]) for r in results
+           if r["launch_count"]["fused"] != 1]
+    assert not bad, f"fused path issued != 1 launch on points {bad}"
+    assert all(r["fused_bit_exact"] for r in results), \
+        "fused path lost bit-exactness on a smoke point"
+    multi = [r for r in results if r["n_instances"] > 1]
+    assert multi, "smoke grid has no multi-instance design point"
+    best = max(r["fused_speedup_vs_kernel"] for r in multi)
+    assert best >= 1.0, \
+        (f"fused megakernel never reached per-instance parity on any "
+         f"multi-instance smoke point (best speedup {best:.2f}x)")
+    _row("bank.fused_smoke_gate", 0.0,
+         f"launches_ok=True best_multi_instance_speedup={best:.2f}x")
 
 
 def bench_bank(out_path: str | None = None, smoke: bool = False):
@@ -149,19 +249,26 @@ def bench_bank(out_path: str | None = None, smoke: bool = False):
         ms = r["scheduler_makespans"]
         _row(f"bank.{bits}b_tp{tp.numerator}_{tp.denominator}",
              r["wall_us_steady"],
-             f"exact={r['bit_exact']} util={r['utilization']:.3f} "
+             f"exact={r['bit_exact']} fused_exact={r['fused_bit_exact']} "
+             f"util={r['utilization']:.3f} "
              f"cycles={r['cycles']} "
              f"rr={ms['round_robin']} greedy={ms['greedy']} "
              f"stream={ms['streaming']} "
              f"ws_saving={r['working_set_saving']:.0%} "
              f"area_saving={r['area_saving']:.0%} "
              f"E={r['energy_per_op_pj']:.2f}pJ "
-             f"first_us={r['wall_us_first_call']:.0f}")
+             f"launches={r['launch_count']['kernel']}->"
+             f"{r['launch_count']['fused']} "
+             f"fused_speedup={r['fused_speedup_vs_kernel']:.2f}x")
+    if smoke:
+        _assert_fused_smoke(results)
     path = out_path or os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
         "BENCH_bank.json")
     with open(path, "w") as f:
-        json.dump({"design_points": results, "smoke": smoke}, f, indent=1)
+        json.dump({"fields": FIELDS,
+                   "interpret_mode": runtime.interpret_mode(),
+                   "design_points": results, "smoke": smoke}, f, indent=1)
     _row("bank.artifact", 0.0, f"wrote={path} n={len(results)}")
     return results
 

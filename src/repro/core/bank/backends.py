@@ -7,7 +7,9 @@ keyed by ``(arch, capability)``:
 
   * ``arch``        -- the planner architecture: star | fb | ff | karatsuba
   * ``capability``  -- the execution substrate: "core" (pure jnp
-                       ``mcim_mul``) or "kernel" (Pallas TPU kernels).
+                       ``mcim_mul``), "kernel" (one Pallas launch per
+                       instance) or "fused" (the whole bank round as ONE
+                       ``kernels.bank_fold`` megakernel launch).
 
 Every planner arch now has a real Pallas path -- Star/FB/FF through the
 ``kernels.mcim_fold`` FB/FF schedules, Karatsuba through the new folded
@@ -15,6 +17,13 @@ CT=3 Karatsuba schedule in the same kernel family -- so the "kernel"
 capability needs no core fallback.  New substrates (e.g. a non-interpret
 TPU build, a GPU port) register additional capabilities without touching
 the engine.
+
+The "fused" capability is bank-level: dispatch is built by
+``kernels.bank_fold.make_fused_dispatch`` over the *whole* instance
+list, so its ``make_mul`` only serves as the per-instance fallback (the
+sharded path, direct ``be.make_mul`` callers) and its ``working_set`` is
+the time-shared datapath footprint -- identical for every instance and
+NOT summed across the bank (see ``Bank.report``).
 """
 from __future__ import annotations
 
@@ -24,7 +33,7 @@ from typing import Callable
 
 from ..mcim import MCIMConfig, mcim_mul
 
-CAPABILITIES = ("core", "kernel")
+CAPABILITIES = ("core", "kernel", "fused")
 #: Back-compat alias: the PR-2 bank exposed the capability names as BACKENDS.
 BACKENDS = CAPABILITIES
 
@@ -109,4 +118,40 @@ for _arch in ("star", "fb", "ff", "karatsuba"):
         arch=_arch, capability="kernel",
         make_mul=_kernel_fold_mul, working_set=_vmem))
 
+
+# ------------------------------------------------------------ fused backends
+
+def _fused_vmem(cfg: MCIMConfig, la: int, lb: int, tile_b: int) -> int:
+    """Per-step footprint of the fused datapath ALL instances time-share.
+
+    Independent of ``cfg``: the megakernel runs every arch through the
+    same windowed-schoolbook datapath, so one figure covers the bank.
+    """
+    from repro.kernels.bank_fold import vmem_bytes_per_step
+    return vmem_bytes_per_step(la, lb, tile_b)
+
+
+for _arch in ("star", "fb", "ff", "karatsuba"):
+    register_backend(InstanceBackend(
+        arch=_arch, capability="fused",
+        make_mul=_kernel_fold_mul,        # per-instance fallback path
+        working_set=_fused_vmem))
+
 del _arch
+
+
+# --------------------------------------------------------------- mul caching
+
+@functools.lru_cache(maxsize=256)
+def cached_mul(arch: str, capability: str, cfg: MCIMConfig,
+               la: int, lb: int) -> Callable:
+    """Backend multiplier shared across ``Bank`` instantiations.
+
+    Repeated ``generate()`` of the same registry point used to rebuild
+    (and re-trace) identical instance kernels per ``Bank``; keying on
+    the frozen ``(arch, capability, cfg, la, lb)`` tuple lets every bank
+    with the same instance shape reuse one jitted multiplier -- jax's
+    own jit cache is keyed on function identity, so returning the *same*
+    callable is what makes the traces shareable.
+    """
+    return get_backend(arch, capability).make_mul(cfg, la, lb)

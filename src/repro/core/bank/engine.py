@@ -32,7 +32,7 @@ import jax.numpy as jnp
 from .. import limbs as L
 from ..mcim import MCIMConfig
 from ..planner import Plan
-from .backends import BACKENDS, get_backend
+from .backends import BACKENDS, cached_mul, get_backend
 from .schedule import get_scheduler
 
 
@@ -90,9 +90,14 @@ class Bank:
     ``execute(a, b)`` multiplies a batch of limb vectors
     (B, LA) x (B, LB) -> (B, LA+LB) bit-exactly; ``last_report`` /
     ``report(batch)`` exposes the cycle accounting.  ``backend`` picks
-    the instance substrate ("core" | "kernel"), ``scheduler`` the
-    dispatch policy ("round_robin" | "greedy" | "streaming" or any
+    the instance substrate ("core" | "kernel" | "fused"), ``scheduler``
+    the dispatch policy ("round_robin" | "greedy" | "streaming" or any
     registered :class:`~.schedule.Scheduler`).
+
+    The "fused" backend collapses the whole bank round into ONE
+    ``kernels.bank_fold`` megakernel launch (vs one launch per busy
+    instance on "kernel"); :meth:`launch_count` reports the difference
+    from the traced jaxpr.
     """
 
     # each distinct batch size compiles its own dispatch; bound the set
@@ -120,8 +125,17 @@ class Bank:
         self._cts = tuple(cfg.ct for cfg in self.instances)
         self._backends = tuple(get_backend(cfg.arch, backend)
                                for cfg in self.instances)
-        self._muls = tuple(be.make_mul(cfg, self.la, self.lb)
-                           for cfg, be in zip(self.instances, self._backends))
+        # cached across Bank instantiations: same instance shape -> same
+        # callable -> shared jit trace (see backends.cached_mul)
+        self._muls = tuple(cached_mul(cfg.arch, backend, cfg,
+                                      self.la, self.lb)
+                           for cfg in self.instances)
+        signedness = {cfg.signed for cfg in self.instances}
+        if backend == "fused" and len(signedness) > 1:
+            raise ValueError(
+                "fused backend needs uniform signedness across instances "
+                "(the correction pass is applied bank-wide)")
+        self._signed = self.instances[0].signed
         self._compiled = {}           # batch size -> jitted execute
         self.last_report = None
 
@@ -136,8 +150,12 @@ class Bank:
         insts = tuple(
             InstanceReport(cfg, len(ops), len(ops) * cfg.ct)
             for cfg, ops in zip(self.instances, assign))
-        ws = sum(be.working_set(cfg, self.la, self.lb, self.tile_b)
-                 for cfg, be in zip(self.instances, self._backends))
+        footprints = tuple(
+            be.working_set(cfg, self.la, self.lb, self.tile_b)
+            for cfg, be in zip(self.instances, self._backends))
+        # fused instances time-share ONE datapath, so the bank's working
+        # set is the largest instance footprint, not the sum
+        ws = max(footprints) if self.backend == "fused" else sum(footprints)
         return BankReport(batch=batch, cycles=cycles, instances=insts,
                           plan_throughput=self.plan.throughput,
                           working_set_bytes=ws,
@@ -151,6 +169,11 @@ class Bank:
         wraps it in ``jax.jit``.
         """
         assign, _ = self.scheduler.schedule(self._cts, batch)
+        if self.backend == "fused":
+            from repro.kernels.bank_fold import make_fused_dispatch
+            return make_fused_dispatch(assign, self.instances,
+                                       self.la, self.lb, batch,
+                                       signed=self._signed)
         idx = [np.asarray(ops, np.int32) for ops in assign]
         muls = self._muls
         la, lb = self.la, self.lb
@@ -168,6 +191,18 @@ class Bank:
 
     def _build(self, batch: int):
         return jax.jit(self.dispatch_fn(batch))
+
+    def launch_count(self, batch: int) -> int:
+        """Pallas launches one bank round issues for this batch size.
+
+        Traced from the dispatch jaxpr (no execution): exactly 1 on the
+        fused path, one per busy instance on the per-instance kernel
+        path, 0 on the pure-jnp core path.
+        """
+        from repro.launch.roofline import count_pallas_launches
+        a = jnp.zeros((batch, self.la), L.LIMB_DTYPE)
+        b = jnp.zeros((batch, self.lb), L.LIMB_DTYPE)
+        return count_pallas_launches(self.dispatch_fn(batch), a, b)
 
     def execute(self, a: jax.Array, b: jax.Array) -> jax.Array:
         """(B, LA) x (B, LB) -> (B, LA+LB) limbs, bit-exact."""

@@ -64,18 +64,21 @@ def mcim_mul(a: jax.Array, b: jax.Array,
     return karatsuba_mul(a, b, levels=cfg.levels, ct=cfg.ct, adder=cfg.adder)
 
 
-def _signed_mul(a: jax.Array, b: jax.Array, cfg: MCIMConfig) -> jax.Array:
-    """Signed (two's-complement) extension, paper Sec. I.
+def signed_correction(a: jax.Array, b: jax.Array,
+                      prod: jax.Array) -> jax.Array:
+    """Turn an *unsigned* product into the two's-complement one.
 
     For P-limb operands interpreted mod 2**(16P):
       signed(a)*signed(b) == a*b - (a<0)*b*2**(16LA) - (b<0)*a*2**(16LB)
     (mod 2**(16(LA+LB))), i.e. subtract the sign corrections from the
     unsigned product -- implemented with the same compressor/complement
-    machinery as Karatsuba's subtractions.
+    machinery as Karatsuba's subtractions.  Exposed separately from
+    :func:`_signed_mul` so substrates that produce the unsigned product
+    elsewhere (the fused bank megakernel) can retire signed designs with
+    the identical correction pass.
     """
     la, lb = a.shape[-1], b.shape[-1]
     width = la + lb
-    prod = mcim_mul(a, b, cfg)
     a_neg = (a[..., -1] >> (L.RADIX_BITS - 1)) & 1       # sign bits
     b_neg = (b[..., -1] >> (L.RADIX_BITS - 1)) & 1
     corr_b = jnp.where(a_neg[..., None].astype(jnp.bool_), b, 0)
@@ -84,6 +87,11 @@ def _signed_mul(a: jax.Array, b: jax.Array, cfg: MCIMConfig) -> jax.Array:
     na, oa = L.negate_cols(corr_a, lb, width)
     acc = L.compress([(prod, 0), (nb, 0), (ob, 0), (na, 0), (oa, 0)], width)
     return L.final_adder_1ca(acc, width)
+
+
+def _signed_mul(a: jax.Array, b: jax.Array, cfg: MCIMConfig) -> jax.Array:
+    """Signed (two's-complement) extension, paper Sec. I."""
+    return signed_correction(a, b, mcim_mul(a, b, cfg))
 
 
 # Convenience fixed-width wrappers -------------------------------------------

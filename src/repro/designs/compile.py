@@ -233,15 +233,26 @@ class CompiledDesign:
 
 # ---------------------------------------------------------------- generate
 
-def _resolve_backend(spec: DesignSpec) -> str:
+def _resolve_backend(spec: DesignSpec, plan: planner.Plan) -> str:
     if spec.backend == "kernel" and spec.signed:
         raise DesignError("the kernel capability is unsigned-only; use "
-                          "backend='core' (or 'auto') for signed designs")
+                          "backend='core', 'fused' or 'auto' for signed "
+                          "designs (fused retires signedness through the "
+                          "shared correction pass)")
     if spec.backend != "auto":
         return spec.backend
-    # auto: Pallas kernels where they are native, pure-jnp elsewhere
-    if not spec.signed and jax.default_backend() == "tpu":
-        return "kernel"
+    # auto: one fused megakernel launch per round where Pallas is
+    # native and every instance arch has a fused backend; per-instance
+    # kernels as the unsigned fallback; pure-jnp elsewhere (the CPU
+    # container would pay interpret-mode kernel cost for nothing)
+    if jax.default_backend() == "tpu":
+        from repro.core.bank.backends import registered_backends
+        registered = set(registered_backends())
+        if all((cfg.arch, "fused") in registered
+               for _, cfg in plan.configs):
+            return "fused"
+        if not spec.signed:
+            return "kernel"
     return "core"
 
 
@@ -337,7 +348,7 @@ def generate(spec: DesignSpec, mesh=None) -> CompiledDesign:
         from .registry import get
         spec = get(spec)
     plan, fallback = _plan_with_timing(spec)
-    backend = _resolve_backend(spec)
+    backend = _resolve_backend(spec, plan)
     bank = Bank(plan, spec.bits_a, spec.bits_b, backend=backend,
                 scheduler=spec.scheduler)
     return CompiledDesign(spec, plan, bank,
@@ -391,7 +402,7 @@ def compile_plan(spec: DesignSpec, configs, mesh=None) -> CompiledDesign:
     # prove safe before a bank is built around them
     verify.assert_plan(spec.bits_a, spec.bits_b, plan.configs,
                        plan.throughput)
-    backend = _resolve_backend(spec)
+    backend = _resolve_backend(spec, plan)
     bank = Bank(plan, spec.bits_a, spec.bits_b, backend=backend,
                 scheduler=spec.scheduler)
     return CompiledDesign(spec, plan, bank,

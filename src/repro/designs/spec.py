@@ -40,7 +40,7 @@ from fractions import Fraction
 #: throughput always equals its compiled plan's.
 from repro.core.planner import MAX_TP_DENOMINATOR, OBJECTIVES
 
-_BACKENDS = ("auto", "core", "kernel")
+_BACKENDS = ("auto", "core", "kernel", "fused")
 _SPEC_VERSION = 1
 
 
@@ -67,7 +67,7 @@ class DesignSpec:
     strict_timing: bool = False
     signed: bool = False
     scheduler: str = "round_robin"
-    backend: str = "auto"               # auto | core | kernel
+    backend: str = "auto"               # auto | core | kernel | fused
     replicas: int = 1                   # bank replicas over a mesh axis
     mesh_axis: str = "data"
     objective: str = "area"             # planner ranking: area | energy

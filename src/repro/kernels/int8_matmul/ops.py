@@ -2,15 +2,13 @@
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import runtime
 from .kernel import int8_matmul
 from .ref import int8_matmul_ref
-
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
 
 
 def quantize_rows(x: jax.Array, axis: int = -1):
@@ -33,5 +31,5 @@ def quantized_matmul(x: jax.Array, w: jax.Array, use_kernel: bool = True,
     if use_kernel and m % min(block, m) == 0 and n % min(block, n) == 0 \
             and k % min(block, k) == 0:
         return int8_matmul(qx, qw, sx, sw, block_m=block, block_n=block,
-                           block_k=block, interpret=INTERPRET)
+                           block_k=block, interpret=runtime.interpret_mode())
     return int8_matmul_ref(qx, qw, sx, sw)

@@ -1,13 +1,11 @@
 """Jitted wrapper with batch-tile selection for the Karatsuba PPM kernel."""
 import functools
-import os
 
 import jax
 
+from repro.kernels import runtime
 from .kernel import karatsuba_ppm_mul
 from .ref import karatsuba_ppm_mul_ref
-
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel",))
@@ -17,4 +15,4 @@ def kara_mul(a: jax.Array, b: jax.Array, use_kernel: bool = True):
     bsz = a.shape[0]
     tile = next(t for t in (256, 128, 64, 32, 16, 8, 4, 2, 1)
                 if bsz % t == 0)
-    return karatsuba_ppm_mul(a, b, tile_b=tile, interpret=INTERPRET)
+    return karatsuba_ppm_mul(a, b, tile_b=tile, interpret=runtime.interpret_mode())

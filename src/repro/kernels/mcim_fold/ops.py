@@ -7,13 +7,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import limbs as L
+from repro.kernels import runtime
 from .kernel import mcim_fold_mul, fold_geometry
 from .ref import mcim_fold_mul_ref
-
-# On this (CPU) container the kernel always runs in interpret mode; on a
-# real TPU flip the default with REPRO_PALLAS_INTERPRET=0.
-import os
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
 
 _TILES = (512, 256, 128, 64, 32, 16, 8)
 
@@ -58,7 +54,7 @@ def big_mul(a: jax.Array, b: jax.Array, ct: int = 2, schedule: str = "fb",
         a = jnp.pad(a, ((0, pad), (0, 0)))
         b = jnp.pad(b, ((0, pad), (0, 0)))
     out = mcim_fold_mul(a, b, ct=ct, tile_b=tile, schedule=schedule,
-                        interpret=INTERPRET)
+                        interpret=runtime.interpret_mode())
     return out[:bsz] if pad else out
 
 

@@ -1,13 +1,11 @@
 """Jitted wrapper for the Brent-Kung final adder kernel."""
 import functools
-import os
 
 import jax
 
+from repro.kernels import runtime
 from .kernel import prefix_final_adder
 from .ref import prefix_final_adder_ref
-
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel",))
@@ -17,4 +15,4 @@ def fast_final_adder(cols: jax.Array, use_kernel: bool = True):
     bsz = cols.shape[0]
     tile = next(t for t in (256, 128, 64, 32, 16, 8, 4, 2, 1)
                 if bsz % t == 0)
-    return prefix_final_adder(cols, tile_b=tile, interpret=INTERPRET)
+    return prefix_final_adder(cols, tile_b=tile, interpret=runtime.interpret_mode())

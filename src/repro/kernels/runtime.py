@@ -1,0 +1,53 @@
+"""Single owner of Pallas interpret-mode selection.
+
+Every kernel family used to declare its own module-level
+``INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"``
+copy; four duplicated policies meant a real-backend port had to flip
+four flags (and a fifth for every new kernel).  This module is the one
+flag: :func:`interpret_mode` returns True when kernels should run
+through the Pallas interpreter (the CPU container) and False the moment
+a real TPU/GPU backend is present -- so every kernel, the fused bank
+megakernel included, is non-interpret-ready without code changes.
+
+Resolution order:
+
+  1. ``REPRO_INTERPRET``         -- explicit override; "0"/"false"/"off"
+                                    force native lowering, anything else
+                                    forces the interpreter
+  2. ``REPRO_PALLAS_INTERPRET``  -- legacy name, same semantics
+  3. auto                        -- interpret on CPU, native on TPU/GPU
+
+The decision is cached for the life of the process (kernels bake it
+into their jit traces as a static argument); tests can re-evaluate the
+environment via :func:`reset`.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+#: values that disable the interpreter when set in either env var
+_FALSY = ("0", "false", "False", "no", "off")
+
+#: jax backends with native Pallas lowering (no interpreter needed)
+_NATIVE_BACKENDS = ("tpu", "gpu")
+
+
+@functools.lru_cache(maxsize=1)
+def interpret_mode() -> bool:
+    """Should Pallas kernels run under ``interpret=True``?"""
+    for var in ("REPRO_INTERPRET", "REPRO_PALLAS_INTERPRET"):
+        val = os.environ.get(var)
+        if val is not None:
+            return val not in _FALSY
+    import jax
+    return jax.default_backend() not in _NATIVE_BACKENDS
+
+
+def reset() -> None:
+    """Forget the cached decision (test hook: re-read the environment).
+
+    Kernels that already traced with the old value keep their jit cache;
+    callers re-reading :func:`interpret_mode` see the fresh decision.
+    """
+    interpret_mode.cache_clear()

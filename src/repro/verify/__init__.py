@@ -26,21 +26,25 @@ import functools
 from . import intervals, contracts, lint
 from .intervals import IntervalReport, Violation, analyze
 from .contracts import (check_coverage, check_widths, check_throughput,
-                        check_all_schedulers, check_bank_static)
+                        check_fused_schedule, check_fused_widths,
+                        check_fused_plan, check_all_schedulers,
+                        check_bank_static)
 from .lint import lint_tree, lint_source
 
 __all__ = [
     "intervals", "contracts", "lint",
     "IntervalReport", "Violation", "VerificationError",
     "analyze", "check_coverage", "check_widths", "check_throughput",
+    "check_fused_schedule", "check_fused_widths", "check_fused_plan",
     "check_all_schedulers", "check_bank_static",
     "lint_tree", "lint_source",
     "verify_instance", "verify_plan", "assert_plan", "verify_design",
 ]
 
 #: substrates swept per instance (kernel skipped for signed configs,
-#: whose capability is core-only)
-_SUBSTRATES = ("core", "kernel")
+#: whose capability is core-only; fused handles signedness through the
+#: bank-wide correction pass, so it is swept unconditionally)
+_SUBSTRATES = ("core", "kernel", "fused")
 
 
 class VerificationError(ValueError):
@@ -69,6 +73,8 @@ def verify_instance(bits_a: int, bits_b: int, cfg) -> tuple:
     out = []
     out.extend(contracts.check_coverage(bits_a, bits_b, cfg))
     out.extend(contracts.check_widths(bits_a, bits_b, cfg))
+    out.extend(contracts.check_fused_schedule(bits_a, bits_b, cfg))
+    out.extend(contracts.check_fused_widths(bits_a, bits_b, cfg))
     for sub in _SUBSTRATES:
         if sub == "kernel" and cfg.signed:
             continue
@@ -79,13 +85,15 @@ def verify_instance(bits_a: int, bits_b: int, cfg) -> tuple:
 
 def verify_plan(bits_a: int, bits_b: int, configs,
                 throughput=None) -> tuple:
-    """All violations of a plan: throughput sum + every instance."""
+    """All violations of a plan: throughput sum + every instance + the
+    fused super-geometry (idle-step masks, SMEM table consistency)."""
     out = []
     configs = tuple(configs)
     if throughput is not None:
         out.extend(contracts.check_throughput(configs, throughput))
     for _, cfg in configs:
         out.extend(verify_instance(bits_a, bits_b, cfg))
+    out.extend(contracts.check_fused_plan(bits_a, bits_b, configs))
     return tuple(out)
 
 

@@ -11,6 +11,9 @@ Sections of the sweep (each contributes to ``VERIFY_report.json``):
   decompositions  sample fractional TPs decomposed by
                   ``autotune.candidates.enumerate_configs``, every
                   candidate checked for throughput + instance safety;
+  fused           bank-level fused-megakernel contracts of every
+                  registry plan (super-geometry idle masks, SMEM table
+                  consistency, window coverage, scratch domination);
   schedulers      determinism/completeness/makespan contracts of every
                   registered dispatch policy;
   bank            ``Bank.dispatch_fn`` staticness under eval_shape;
@@ -131,6 +134,45 @@ def sweep_decompositions(tps, bits: int = 32) -> tuple:
     return results, violations
 
 
+def sweep_fused() -> tuple:
+    """Fused-megakernel contracts of every registry plan.
+
+    Per design: the bank-level super-geometry promises (idle-step
+    masks, SMEM table consistency, shared widths) plus the fused
+    window coverage, scratch domination and interval walk of every
+    instance -- the proof obligations of running that plan as ONE
+    Pallas launch.  (The vocabulary sweep already covers fused
+    per-instance checks width-by-width via ``verify_instance``.)
+    """
+    from repro.designs import registry
+    from repro.designs.compile import _plan_with_timing
+    from . import VerificationError
+    results, violations = [], []
+    for name in sorted(registry.names()):
+        spec = registry.get(name)
+        try:
+            plan, _ = _plan_with_timing(spec)
+        except VerificationError:
+            continue                  # already reported by sweep_registry
+        vs = list(contracts.check_fused_plan(spec.bits_a, spec.bits_b,
+                                             plan.configs))
+        worst = None
+        for _, cfg in plan.configs:
+            vs.extend(contracts.check_fused_schedule(
+                spec.bits_a, spec.bits_b, cfg))
+            vs.extend(contracts.check_fused_widths(
+                spec.bits_a, spec.bits_b, cfg))
+            rep = intervals.analyze(spec.bits_a, spec.bits_b, cfg,
+                                    substrate="fused")
+            vs.extend(rep.violations)
+            if worst is None or rep.headroom_bits < worst:
+                worst = rep.headroom_bits
+        violations.extend(vs)
+        results.append({"design": name, "ok": not vs,
+                        "fused_headroom_bits": worst})
+    return results, violations
+
+
 def sweep_bank(bits: int = 32) -> tuple:
     from repro.core import planner
     violations = []
@@ -172,6 +214,11 @@ def main(argv=None) -> int:
     all_violations.extend(vs)
     n_cand = sum(r["candidates"] for r in sections["decompositions"])
     print(f"  decompositions: {n_cand} candidates, {len(vs)} violations")
+
+    sections["fused"], vs = sweep_fused()
+    all_violations.extend(vs)
+    print(f"  fused:          {len(sections['fused'])} plans as one "
+          f"launch, {len(vs)} violations")
 
     vs = contracts.check_all_schedulers()
     sections["schedulers"] = [{"cases": len(contracts.SCHEDULER_CASES),

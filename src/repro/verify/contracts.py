@@ -38,6 +38,8 @@ from repro.core import limbs as L
 from repro.core.mcim import MCIMConfig
 from repro.core.bank.schedule import SCHEDULERS
 from repro.kernels.mcim_fold import fold_geometry
+from repro.kernels.bank_fold.geometry import (fused_windows,
+                                              super_geometry)
 
 from . import intervals
 from .intervals import Violation
@@ -213,6 +215,106 @@ def check_widths(bits_a: int, bits_b: int, cfg: MCIMConfig,
     return out
 
 
+# ----------------------------------------------------------------- fused
+
+def check_fused_schedule(bits_a: int, bits_b: int, cfg: MCIMConfig,
+                         windows=None) -> list:
+    """Coverage of one instance's fused-megakernel window schedule.
+
+    The fused datapath is a windowed schoolbook for EVERY arch
+    (Karatsuba included: its CT=3 fused row is three B-windows, not the
+    combine identity), so the bilinear-form check applies uniformly.
+    ``windows`` overrides the geometry-derived schedule so tests can
+    seed corrupted tables.
+    """
+    la = L.n_limbs_for_bits(bits_a)
+    lb = L.n_limbs_for_bits(bits_b)
+    where = f"fused {cfg.arch}(ct={cfg.ct}) {bits_a}x{bits_b}b"
+    wins = fused_windows(cfg, la, lb) if windows is None else tuple(windows)
+    return check_windows(la, lb, wins, where)
+
+
+def check_fused_widths(bits_a: int, bits_b: int, cfg: MCIMConfig,
+                       scratch_width=None, out_width=None) -> list:
+    """Fused scratch/out widths vs the fused interval walk's requirement.
+
+    Overrides let tests seed a scratch one column too narrow, the same
+    silent-truncation bug class the per-instance widths contract
+    rejects.
+    """
+    la = L.n_limbs_for_bits(bits_a)
+    lb = L.n_limbs_for_bits(bits_b)
+    where = f"fused {cfg.arch}(ct={cfg.ct}) {bits_a}x{bits_b}b"
+    sg = super_geometry((cfg,), la, lb)
+    declared_scratch = sg.scratch_width if scratch_width is None \
+        else scratch_width
+    declared_out = sg.out_width if out_width is None else out_width
+    required = intervals.required_scratch_width(bits_a, bits_b, cfg,
+                                                substrate="fused")
+    out = []
+    if declared_scratch < required:
+        out.append(Violation(
+            "contracts", "scratch-too-narrow", where,
+            f"fused scratch holds {declared_scratch} columns but the "
+            f"interval analysis needs {required}: the accumulator would "
+            f"silently truncate high columns"))
+    if declared_out != la + lb:
+        out.append(Violation(
+            "contracts", "out-width", where,
+            f"fused out width {declared_out} != product width {la + lb}"))
+    return out
+
+
+def check_fused_plan(bits_a: int, bits_b: int, configs) -> list:
+    """Bank-level contracts of the fused super-geometry.
+
+    ``configs`` is the plan's ``(count, cfg)`` list.  Beyond the
+    per-instance coverage/width contracts, the super-geometry itself
+    promises: every padded row step beyond an instance's real fold is
+    the idle mask ``(0, 0)`` (so heterogeneous CTs are architectural
+    no-ops, not garbage accumulation), and the materialized SMEM table
+    agrees entry-for-entry with the per-row windows the coverage proof
+    ran over.
+    """
+    la = L.n_limbs_for_bits(bits_a)
+    lb = L.n_limbs_for_bits(bits_b)
+    flat = tuple(cfg for count, cfg in configs for _ in range(count))
+    where = f"fused bank {bits_a}x{bits_b}b ({len(flat)} instances)"
+    if not flat:
+        return [Violation("contracts", "fused-empty-bank", where,
+                          "fused launch needs at least one instance")]
+    sg = super_geometry(flat, la, lb)
+    out = []
+    table = sg.table()
+    for i, (cfg, geo) in enumerate(zip(sg.configs, sg.rows)):
+        wins = sg.windows(i)
+        if len(wins) != sg.max_steps:
+            out.append(Violation(
+                "contracts", "fused-row-length", where,
+                f"instance {i} has {len(wins)} padded steps, grid "
+                f"expects {sg.max_steps}"))
+        for j in range(geo.ct_run, sg.max_steps):
+            if wins[j] != (0, 0):
+                out.append(Violation(
+                    "contracts", "fused-idle-mask", where,
+                    f"instance {i} idle step {j} is {wins[j]}, not the "
+                    f"(0, 0) mask -- it would accumulate garbage"))
+        for j, (lo, hi) in enumerate(wins):
+            if tuple(table[i, j]) != (lo, hi):
+                out.append(Violation(
+                    "contracts", "fused-table-mismatch", where,
+                    f"SMEM table[{i}, {j}] = {tuple(table[i, j])} "
+                    f"differs from geometry window {(lo, hi)}"))
+        if geo.scratch_width != sg.scratch_width or \
+                geo.out_width != sg.out_width:
+            out.append(Violation(
+                "contracts", "fused-row-width", where,
+                f"instance {i} declares scratch/out "
+                f"{geo.scratch_width}/{geo.out_width}, super-geometry "
+                f"shares {sg.scratch_width}/{sg.out_width}"))
+    return out
+
+
 # ------------------------------------------------------------ throughput
 
 def check_throughput(configs, throughput, where: str = "plan") -> list:
@@ -335,9 +437,10 @@ def check_bank_static(plan, bits_a: int, bits_b: int,
 # ------------------------------------------------------------- aggregate
 
 def check_plan(bits_a: int, bits_b: int, configs, throughput,
-               substrates=("core", "kernel")) -> list:
+               substrates=("core", "kernel", "fused")) -> list:
     """Full contract sweep of one plan: throughput sum + per-instance
-    coverage, widths and interval safety on every substrate."""
+    coverage, widths and interval safety on every substrate, plus the
+    fused super-geometry contracts when the fused substrate is swept."""
     out = list(check_throughput(configs, throughput))
     for _, cfg in configs:
         out.extend(check_coverage(bits_a, bits_b, cfg))
@@ -347,4 +450,9 @@ def check_plan(bits_a: int, bits_b: int, configs, throughput,
                 continue          # the kernel capability is unsigned-only
             rep = intervals.analyze(bits_a, bits_b, cfg, substrate=sub)
             out.extend(rep.violations)
+        if "fused" in substrates:
+            out.extend(check_fused_schedule(bits_a, bits_b, cfg))
+            out.extend(check_fused_widths(bits_a, bits_b, cfg))
+    if "fused" in substrates:
+        out.extend(check_fused_plan(bits_a, bits_b, configs))
     return out

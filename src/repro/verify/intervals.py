@@ -40,11 +40,13 @@ import math
 from repro.core import limbs as L
 from repro.core.mcim import MCIMConfig
 from repro.kernels.mcim_fold import fold_geometry
+# geometry module directly: keeps verify import-light (no Pallas pull-in)
+from repro.kernels.bank_fold.geometry import fused_windows
 
 U32_MAX = L.U32_MAX
 
 #: execution substrates a design can be proven for (cf. bank.backends)
-SUBSTRATES = ("core", "kernel")
+SUBSTRATES = ("core", "kernel", "fused")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -328,6 +330,29 @@ def _star_walk(amax, bmax, adder, ctx):
     return len(amax) + len(bmax)
 
 
+def _fused_walk(amax, bmax, cfg, ctx):
+    """Fused bank megakernel dataflow (``kernels.bank_fold``).
+
+    Every arch runs the same windowed-schoolbook datapath there: grid
+    step t masks B to its ``fused_windows`` limb range, the masked PPM
+    columns land at absolute positions in the full-width carry-save
+    accumulator (no per-step shift), and one final carry pass retires
+    the product on the last step.  Idle padded steps have empty windows
+    and contribute exactly zero, so checking the real windows covers
+    the padded super-geometry row.
+    """
+    la, lb = len(amax), len(bmax)
+    width = la + lb
+    acc = [0] * width
+    for t, (lo, hi) in enumerate(fused_windows(cfg, la, lb)):
+        bm = [bmax[j] if lo <= j < hi else 0 for j in range(lb)]
+        cols = ppm_bounds(amax, bm)
+        acc = [x + y for x, y in zip(acc, cols)]
+        ctx.check(acc, f"fused step {t} accumulator")
+    adder_bounds(acc, width, ctx, "fused final carry")
+    return width
+
+
 def _signed_walk(la, lb, ctx):
     """The _signed_mul correction pass on top of the unsigned product."""
     width = la + lb
@@ -345,8 +370,9 @@ def analyze(bits_a: int, bits_b: int, cfg: MCIMConfig,
             substrate: str = "core") -> IntervalReport:
     """Prove (or refute) overflow-safety of one design on one substrate.
 
-    Walks the exact dataflow ``mcim_mul`` (substrate="core") or the
-    ``mcim_fold`` Pallas kernels (substrate="kernel") execute for a
+    Walks the exact dataflow ``mcim_mul`` (substrate="core"), the
+    ``mcim_fold`` Pallas kernels (substrate="kernel") or the
+    ``bank_fold`` megakernel (substrate="fused") execute for a
     ``bits_a x bits_b`` multiply under ``cfg``, propagating worst-case
     per-column magnitudes.  ``required_width`` is the accumulator width
     the walk needed -- the figure the scratch contract checks against.
@@ -357,7 +383,9 @@ def analyze(bits_a: int, bits_b: int, cfg: MCIMConfig,
     bmax = operand_bounds(bits_b)
     la, lb = len(amax), len(bmax)
     ctx = _Ctx()
-    if cfg.arch == "star":
+    if substrate == "fused":
+        required = _fused_walk(amax, bmax, cfg, ctx)
+    elif cfg.arch == "star":
         required = _star_walk(amax, bmax, cfg.adder, ctx)
     elif cfg.arch == "fb":
         geo = fold_geometry(la, lb, cfg.ct, "fb")
