@@ -50,6 +50,7 @@ from repro.core import planner, bank
 from repro.core.bank import Bank
 from repro.kernels import runtime
 from repro.kernels.mcim_fold import vmem_bytes_per_step
+from repro.verify import dataflow
 
 RNG = np.random.default_rng(17)
 
@@ -77,6 +78,16 @@ FIELDS = {
     "paths":
         "per-backend timing dict {core|kernel|fused: {wall_us_*, "
         "launch_count}}; top-level wall_us_* columns are the core path",
+    "vmem_bytes_step":
+        "static per-grid-step VMEM residency of the fused megakernel "
+        "launch (bytes), measured from the traced kernel jaxpr by the "
+        "dataflow analyzer -- the TPU analogue of the paper's folded "
+        "silicon area, exact and execution-free",
+    "arith_intensity":
+        "static FLOPs / HBM-bytes of one fused bank launch, from the "
+        "dataflow analyzer's jaxpr interpretation (FLOPs) and "
+        "block-index transition counting (bytes); positions each "
+        "design point on the roofline without running it",
 }
 
 # Paper use cases: pure fractional TPs (one folded instance), the
@@ -171,6 +182,8 @@ def run_design_point(bits: int, tp: Fraction, batch_mult: int = 4) -> dict:
     la = L.n_limbs_for_bits(bits)
     star_ws = n_star * vmem_bytes_per_step(la, la, 1, bk.tile_b)
     conv_area = planner.star_bank_area(bits, bits, tp)
+    # static roofline of the fused launch (dataflow analyzer, cached)
+    static = dataflow.plan_static_stats(bits, bits, plan.configs)
     return {
         "bits": bits,
         "tp": str(tp),
@@ -196,6 +209,8 @@ def run_design_point(bits: int, tp: Fraction, batch_mult: int = 4) -> dict:
         "working_set_bytes": rep.working_set_bytes,
         "star_bank_working_set_bytes": star_ws,
         "working_set_saving": 1 - rep.working_set_bytes / star_ws,
+        "vmem_bytes_step": static["vmem_bytes_step"],
+        "arith_intensity": static["arith_intensity"],
         "area_um2": plan.area,
         "star_bank_area_um2": conv_area,
         "area_saving": 1 - plan.area / conv_area,
@@ -235,8 +250,16 @@ def _assert_fused_smoke(results) -> None:
     assert best >= 1.0, \
         (f"fused megakernel never reached per-instance parity on any "
          f"multi-instance smoke point (best speedup {best:.2f}x)")
+    # static roofline columns: the dataflow analyzer must place every
+    # point on the roofline (positive intensity, nonzero residency)
+    bad = [(r["bits"], r["tp"]) for r in results
+           if not (r.get("vmem_bytes_step", 0) > 0
+                   and r.get("arith_intensity", 0) > 0)]
+    assert not bad, \
+        f"dataflow static roofline columns missing/zero on points {bad}"
     _row("bank.fused_smoke_gate", 0.0,
-         f"launches_ok=True best_multi_instance_speedup={best:.2f}x")
+         f"launches_ok=True best_multi_instance_speedup={best:.2f}x "
+         f"static_roofline_ok=True")
 
 
 def bench_bank(out_path: str | None = None, smoke: bool = False):

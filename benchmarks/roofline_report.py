@@ -4,12 +4,21 @@ Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and
 emits one row per (arch x shape x mesh): the three roofline terms, the
 dominant bottleneck, and the useful-FLOPs ratio.  Also used by
 benchmarks.run to print the summary CSV.
+
+``print_fused_static`` adds the *execution-free* rows: the fused
+megakernel's arithmetic intensity per design point, computed by the
+static dataflow analyzer (``repro.verify.dataflow``) from the traced
+kernel jaxpr -- FLOPs by abstract interpretation, HBM bytes by
+block-index transition counting -- and positioned against the machine
+balance point (peak FLOPs / HBM bandwidth from ``repro.launch``'s
+hardware model).
 """
 from __future__ import annotations
 
 import glob
 import json
 import os
+from fractions import Fraction
 
 HEADERS = ["arch", "shape", "mesh", "kind", "compute_s", "memory_s",
            "collective_s", "dominant", "useful_ratio", "compile_s"]
@@ -56,4 +65,35 @@ def print_csv(d: str = "experiments/dryrun"):
               f"useful={c.get('useful_flops_ratio', 0):.2f}")
 
 
-ALL = [print_csv]
+#: design points positioned on the static roofline (bits, throughput)
+STATIC_POINTS = [(16, Fraction(7, 2)), (32, Fraction(7, 2)),
+                 (64, Fraction(5, 6)), (128, Fraction(1, 2))]
+
+
+def print_fused_static(points=None):
+    """Static roofline rows for the fused megakernel, no execution.
+
+    One row per design point: the dataflow analyzer's FLOPs, HBM
+    bytes, arithmetic intensity and where that sits against the TPU
+    balance point (intensity below balance = HBM-bound launch).
+    """
+    from repro.core import planner
+    from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+    from repro.verify import dataflow
+
+    balance = PEAK_FLOPS / HBM_BW
+    for bits, tp in points or STATIC_POINTS:
+        plan = planner.plan_throughput(bits, bits, tp)
+        s = dataflow.plan_static_stats(bits, bits, plan.configs)
+        bound = ("compute" if s["arith_intensity"] >= balance
+                 else "memory")
+        print(f"roofline.fused_static.{bits}b_tp"
+              f"{tp.numerator}_{tp.denominator},0.00,"
+              f"flops={s['flops_per_launch']} "
+              f"hbm_bytes={s['hbm_bytes_per_launch']} "
+              f"intensity={s['arith_intensity']:.2f} "
+              f"balance={balance:.1f} bound={bound} "
+              f"vmem_step={s['vmem_bytes_step']}")
+
+
+ALL = [print_csv, print_fused_static]

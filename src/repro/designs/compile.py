@@ -309,6 +309,10 @@ def _plan_with_timing(spec: DesignSpec):
     # cannot prove overflow-safe and schedule-conformant never compiles
     verify.assert_plan(spec.bits_a, spec.bits_b, plan.configs,
                        plan.throughput)
+    # dataflow gate: every Pallas launch the plan implies must prove
+    # hazard-free, in-bounds and within its VMEM model -- without
+    # executing (cached per distinct launch geometry)
+    verify.assert_plan_dataflow(spec.bits_a, spec.bits_b, plan.configs)
     return plan, fallback
 
 
@@ -398,10 +402,11 @@ def compile_plan(spec: DesignSpec, configs, mesh=None) -> CompiledDesign:
         if lat > spec.latency_budget:
             raise LatencyError(f"explicit configs need {lat} cycles, "
                                f"over the budget of {spec.latency_budget}")
-    # same static gate generate() applies: explicit instance lists must
+    # same static gates generate() applies: explicit instance lists must
     # prove safe before a bank is built around them
     verify.assert_plan(spec.bits_a, spec.bits_b, plan.configs,
                        plan.throughput)
+    verify.assert_plan_dataflow(spec.bits_a, spec.bits_b, plan.configs)
     backend = _resolve_backend(spec, plan)
     bank = Bank(plan, spec.bits_a, spec.bits_b, backend=backend,
                 scheduler=spec.scheduler)

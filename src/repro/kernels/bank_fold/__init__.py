@@ -3,10 +3,11 @@ from .geometry import (FUSED_SCHEDULE, SuperGeometry, fused_ct,
                        fused_geometry, fused_windows, super_geometry,
                        vmem_bytes_per_step)
 from .kernel import fused_bank_mul
-from .ops import fused_block_rows, make_fused_dispatch
+from .ops import fused_block_rows, launch_contract, make_fused_dispatch
 
 __all__ = [
     "FUSED_SCHEDULE", "SuperGeometry", "fused_ct", "fused_geometry",
     "fused_windows", "super_geometry", "vmem_bytes_per_step",
-    "fused_bank_mul", "fused_block_rows", "make_fused_dispatch",
+    "fused_bank_mul", "fused_block_rows", "launch_contract",
+    "make_fused_dispatch",
 ]

@@ -43,6 +43,57 @@ def fused_block_rows(assign) -> tuple:
     return max_ops + pad, tile_r
 
 
+def launch_contract(configs, la: int, lb: int, rows: int = 64,
+                    tile_r: int = None, table=None):
+    """Static :class:`~repro.kernels.introspect.LaunchContract`.
+
+    Declares the fused megakernel launch for a bank of ``configs``
+    instances: the ``(row tile, instance, grid step)`` grid, the
+    full-width scratch accumulator, the concrete SMEM window table and
+    -- crucially -- which grid steps the super-geometry pads as *idle*
+    (short-CT instances after their last real window), which the
+    dataflow analyzer must prove are no-ops on scratch.
+
+    ``table`` overrides the super-geometry's schedule table; the
+    override flows into both the traced kernel and the declaration, so
+    a corrupted table is analyzed exactly like a shipped one (this is
+    how the property tests inject hazards).
+    """
+    import jax
+
+    from repro.kernels.introspect import LaunchContract
+    sg = super_geometry(configs, la, lb)
+    if tile_r is None:
+        tile_r, pad = batch_tile(rows)
+        rows += pad
+    n_inst = sg.n_instances
+    a = jax.ShapeDtypeStruct((n_inst, rows, la), L.LIMB_DTYPE)
+    b = jax.ShapeDtypeStruct((n_inst, rows, lb), L.LIMB_DTYPE)
+    if table is None:
+        table = sg.table()
+    table = np.asarray(table, np.int32)
+    tbl = jnp.asarray(table)
+    max_steps = sg.max_steps
+
+    def fn(av, bv):
+        return fused_bank_mul(av, bv, tbl, max_steps=max_steps,
+                              tile_r=tile_r, interpret=True)
+
+    idle = tuple((None, i, j) for i, geo in enumerate(sg.rows)
+                 for j in range(geo.ct_run, max_steps))
+    from .geometry import vmem_bytes_per_step
+    return LaunchContract(
+        name=(f"bank_fold[la={la},lb={lb},n={n_inst},"
+              f"steps={max_steps}]"),
+        fn=fn, args=(a, b),
+        grid=(rows // tile_r, n_inst, max_steps),
+        scratch_shapes=(((tile_r, la + lb), "uint32"),),
+        vmem_model_bytes=vmem_bytes_per_step(la, lb, tile_r, n_inst,
+                                             max_steps),
+        idle_steps=idle, table=table,
+        meta={"super_geometry": sg, "tile_r": tile_r, "rows": rows})
+
+
 def make_fused_dispatch(assign, configs, la: int, lb: int, batch: int, *,
                         signed: bool = False):
     """Build the one-launch dispatch closure for one (schedule, batch).

@@ -1,6 +1,6 @@
 from .kernel import int8_matmul
 from .ref import int8_matmul_ref
-from .ops import quantized_matmul, quantize_rows
+from .ops import quantized_matmul, quantize_rows, launch_contract
 
 __all__ = ["int8_matmul", "int8_matmul_ref", "quantized_matmul",
-           "quantize_rows"]
+           "quantize_rows", "launch_contract"]

@@ -11,6 +11,38 @@ from .kernel import int8_matmul
 from .ref import int8_matmul_ref
 
 
+def launch_contract(m: int = 256, k: int = 512, n: int = 256,
+                    block: int = 128):
+    """Static :class:`~repro.kernels.introspect.LaunchContract`.
+
+    One int8 matmul launch with the K dimension folded over
+    ``k // block`` sequential grid steps -- the int32 scratch
+    accumulator is the compressor the analyzer must prove
+    init-before-read across the fold.
+    """
+    from repro.kernels.introspect import LaunchContract
+    bm, bn, bk = min(block, m), min(block, n), min(block, k)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"shape {(m, k, n)} not divisible by block {block}")
+    x = jax.ShapeDtypeStruct((m, k), jnp.int8)
+    w = jax.ShapeDtypeStruct((k, n), jnp.int8)
+    sx = jax.ShapeDtypeStruct((m,), jnp.float32)
+    sw = jax.ShapeDtypeStruct((n,), jnp.float32)
+
+    def fn(xv, wv, sxv, swv):
+        return int8_matmul(xv, wv, sxv, swv, block_m=bm, block_n=bn,
+                           block_k=bk, interpret=True)
+
+    in_bytes = bm * bk + bk * bn + bm * 4 + bn * 4
+    return LaunchContract(
+        name=f"int8_matmul[m={m},k={k},n={n},block={block}]",
+        fn=fn, args=(x, w, sx, sw),
+        grid=(m // bm, n // bn, k // bk),
+        scratch_shapes=(((bm, bn), "int32"),),
+        vmem_model_bytes=in_bytes + bm * bn * 4 + bm * bn * 2,
+        meta={"blocks": (bm, bn, bk)})
+
+
 def quantize_rows(x: jax.Array, axis: int = -1):
     """Symmetric per-row int8 quantization: returns (q, scale)."""
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)

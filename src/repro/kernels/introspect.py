@@ -1,0 +1,57 @@
+"""Launch contracts: what each kernel package *declares* about a launch.
+
+The static dataflow analyzer (:mod:`repro.verify.dataflow`) proves
+hazard freedom, bounds, VMEM footprint and roofline numbers for every
+Pallas launch in the tree.  It must not reverse-engineer grids, scratch
+shapes or idle-step masks out of kernel plumbing -- the package that
+builds a ``pallas_call`` owns those facts, so each package exposes a
+``launch_contract(...)`` hook returning a :class:`LaunchContract`:
+
+  fn / args         a traceable callable + abstract operands; tracing
+                    it (no execution) yields the jaxpr whose single
+                    ``pallas_call`` the analyzer interprets
+  grid              the grid the package intends to launch
+  scratch_shapes    (shape, dtype-name) per VMEM scratch ref
+  vmem_model_bytes  the package's declared per-grid-step working set
+                    (``vmem_bytes_per_step`` of its geometry module);
+                    the analyzer checks the measured block bytes are
+                    dominated by this model
+  idle_steps        grid-step patterns that must be architectural
+                    no-ops on scratch (fused-bank idle-mask padding);
+                    ``None`` entries are wildcards over that grid dim
+  table             the concrete scalar-prefetch table, if any -- the
+                    analyzer evaluates SMEM reads against it and
+                    bounds-checks every window
+
+The analyzer then *verifies* the traced jaxpr against the declaration:
+a package whose kernel drifts from its own contract fails verification
+rather than silently analyzing the wrong launch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchContract:
+    """One kernel package's static declaration of one Pallas launch."""
+    name: str                      # e.g. "mcim_fold/fb[la=2,lb=2,ct=2]"
+    fn: Callable                   # positional callable over ``args``
+    args: tuple                    # jax.ShapeDtypeStruct operands
+    grid: tuple                    # declared launch grid
+    scratch_shapes: tuple          # ((shape, dtype_name), ...) VMEM refs
+    vmem_model_bytes: int          # declared per-step working set
+    idle_steps: tuple = ()         # grid patterns (int | None per dim)
+    table: Optional[Any] = None    # np.ndarray scalar-prefetch table
+    meta: Mapping = dataclasses.field(default_factory=dict)
+
+    def trace(self):
+        """ClosedJaxpr of one ``fn(*args)`` call -- no execution."""
+        import jax
+        return jax.make_jaxpr(self.fn)(*self.args)
+
+    def matches_idle(self, step: tuple) -> bool:
+        """Whether ``step`` is declared architecturally idle."""
+        return any(all(p is None or p == s for p, s in zip(pat, step))
+                   for pat in self.idle_steps)

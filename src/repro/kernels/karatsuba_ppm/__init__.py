@@ -1,5 +1,6 @@
 from .kernel import karatsuba_ppm_mul
 from .ref import karatsuba_ppm_mul_ref
-from .ops import kara_mul
+from .ops import kara_mul, launch_contract
 
-__all__ = ["karatsuba_ppm_mul", "karatsuba_ppm_mul_ref", "kara_mul"]
+__all__ = ["karatsuba_ppm_mul", "karatsuba_ppm_mul_ref", "kara_mul",
+           "launch_contract"]

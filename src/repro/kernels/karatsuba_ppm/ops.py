@@ -8,6 +8,35 @@ from .kernel import karatsuba_ppm_mul
 from .ref import karatsuba_ppm_mul_ref
 
 
+def launch_contract(n: int, batch: int = 256):
+    """Static :class:`~repro.kernels.introspect.LaunchContract`.
+
+    One spatial-Karatsuba launch over a ``batch`` of (N, N) even-limb
+    operands, with the same tile rule :func:`kara_mul` applies.  No
+    scratch refs: the whole 10:2-compressor tree lives in registers,
+    so its declared working set is the three I/O blocks.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.introspect import LaunchContract
+    if n % 2:
+        raise ValueError("even limb count required (pad first)")
+    tile = next(t for t in (256, 128, 64, 32, 16, 8, 4, 2, 1)
+                if batch % t == 0)
+    a = jax.ShapeDtypeStruct((batch, n), jnp.uint32)
+
+    def fn(av, bv):
+        return karatsuba_ppm_mul(av, bv, tile_b=tile, interpret=True)
+
+    return LaunchContract(
+        name=f"karatsuba_ppm[n={n}]",
+        fn=fn, args=(a, a),
+        grid=(batch // tile,),
+        scratch_shapes=(),
+        vmem_model_bytes=tile * (n + n + 2 * n) * 4,
+        meta={"tile_b": tile, "n": n})
+
+
 @functools.partial(jax.jit, static_argnames=("use_kernel",))
 def kara_mul(a: jax.Array, b: jax.Array, use_kernel: bool = True):
     if not use_kernel:

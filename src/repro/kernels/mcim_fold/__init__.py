@@ -1,6 +1,7 @@
-from .ops import big_mul, vmem_bytes_per_step, batch_tile
+from .ops import big_mul, vmem_bytes_per_step, batch_tile, launch_contract
 from .kernel import mcim_fold_mul, fold_geometry, FoldGeometry
 from .ref import mcim_fold_mul_ref
 
 __all__ = ["big_mul", "vmem_bytes_per_step", "batch_tile", "mcim_fold_mul",
-           "fold_geometry", "FoldGeometry", "mcim_fold_mul_ref"]
+           "fold_geometry", "FoldGeometry", "mcim_fold_mul_ref",
+           "launch_contract"]

@@ -58,6 +58,36 @@ def big_mul(a: jax.Array, b: jax.Array, ct: int = 2, schedule: str = "fb",
     return out[:bsz] if pad else out
 
 
+def launch_contract(la: int, lb: int, ct: int, schedule: str = "fb",
+                    batch: int = 256):
+    """Static :class:`~repro.kernels.introspect.LaunchContract`.
+
+    Declares the grid/scratch/VMEM contract of the launch ``big_mul``
+    would issue for a ``batch`` of (LA, LB) multiplications, so the
+    dataflow analyzer verifies the same tiling the dispatch path uses
+    instead of reverse-engineering it.
+    """
+    from repro.kernels.introspect import LaunchContract
+    run_ct = 3 if schedule == "karatsuba" else ct
+    geo = fold_geometry(la, lb, run_ct, schedule)
+    tile, pad = batch_tile(batch)
+    bsz = batch + pad
+    a = jax.ShapeDtypeStruct((bsz, la), L.LIMB_DTYPE)
+    b = jax.ShapeDtypeStruct((bsz, lb), L.LIMB_DTYPE)
+
+    def fn(av, bv):
+        return mcim_fold_mul(av, bv, ct=run_ct, tile_b=tile,
+                             schedule=schedule, interpret=True)
+
+    return LaunchContract(
+        name=f"mcim_fold/{schedule}[la={la},lb={lb},ct={run_ct}]",
+        fn=fn, args=(a, b),
+        grid=(bsz // tile, geo.ct_run),
+        scratch_shapes=(((tile, geo.scratch_width), "uint32"),),
+        vmem_model_bytes=vmem_bytes_per_step(la, lb, ct, tile, schedule),
+        meta={"geometry": geo, "tile_b": tile, "batch": bsz})
+
+
 def vmem_bytes_per_step(la: int, lb: int, ct: int, tile_b: int,
                         schedule: str = "fb") -> int:
     """Per-grid-step VMEM working set (the kernel's 'area').

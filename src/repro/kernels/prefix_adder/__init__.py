@@ -1,6 +1,6 @@
 from .kernel import prefix_final_adder
 from .ref import prefix_final_adder_ref
-from .ops import fast_final_adder
+from .ops import fast_final_adder, launch_contract
 
 __all__ = ["prefix_final_adder", "prefix_final_adder_ref",
-           "fast_final_adder"]
+           "fast_final_adder", "launch_contract"]

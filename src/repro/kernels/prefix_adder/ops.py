@@ -8,6 +8,32 @@ from .kernel import prefix_final_adder
 from .ref import prefix_final_adder_ref
 
 
+def launch_contract(width: int, batch: int = 256):
+    """Static :class:`~repro.kernels.introspect.LaunchContract`.
+
+    One Brent-Kung final-adder launch over a ``batch`` of WIDTH-column
+    carry-save rows, same tile rule as :func:`fast_final_adder`.  No
+    scratch refs; declared working set is the in/out block pair.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.introspect import LaunchContract
+    tile = next(t for t in (256, 128, 64, 32, 16, 8, 4, 2, 1)
+                if batch % t == 0)
+    cols = jax.ShapeDtypeStruct((batch, width), jnp.uint32)
+
+    def fn(cv):
+        return prefix_final_adder(cv, tile_b=tile, interpret=True)
+
+    return LaunchContract(
+        name=f"prefix_adder[width={width}]",
+        fn=fn, args=(cols,),
+        grid=(batch // tile,),
+        scratch_shapes=(),
+        vmem_model_bytes=tile * (width + width) * 4,
+        meta={"tile_b": tile, "width": width})
+
+
 @functools.partial(jax.jit, static_argnames=("use_kernel",))
 def fast_final_adder(cols: jax.Array, use_kernel: bool = True):
     if not use_kernel:

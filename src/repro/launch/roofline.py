@@ -123,27 +123,18 @@ def model_flops(n_active_params: int, tokens: int, kind: str) -> float:
 
 def _count_pallas_eqns(jaxpr) -> int:
     """Recursively count ``pallas_call`` equations in a jaxpr."""
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            n += 1
-        for val in eqn.params.values():
-            vals = val if isinstance(val, (tuple, list)) else (val,)
-            for v in vals:
-                inner = getattr(v, "jaxpr", None)
-                if inner is not None:
-                    n += _count_pallas_eqns(inner)
-    return n
+    from repro.verify import jaxpr_walk
+    return jaxpr_walk.count_primitive(jaxpr, "pallas_call")
 
 
 def count_pallas_launches(fn, *args) -> int:
     """Kernel launches one call of ``fn(*args)`` issues.
 
     Traces ``fn`` (no execution) and counts ``pallas_call`` primitives
-    recursively through nested jaxprs (jit/closed-call bodies).  This is
-    the dispatch-tax metric of the fused-bank work: a per-instance bank
-    round costs one launch per busy instance, the fused megakernel
-    exactly one.
+    recursively through nested jaxprs (jit/closed-call bodies) via the
+    shared ``verify.jaxpr_walk`` traversal.  This is the dispatch-tax
+    metric of the fused-bank work: a per-instance bank round costs one
+    launch per busy instance, the fused megakernel exactly one.
     """
     import jax
     closed = jax.make_jaxpr(fn)(*args)

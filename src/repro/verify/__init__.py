@@ -1,6 +1,6 @@
 """repro.verify: static design verification -- no execution required.
 
-Three analyzers prove properties of every design the repo can generate:
+Four analyzers prove properties of every design the repo can generate:
 
   * :mod:`.intervals`  -- abstract interpretation of the limb pipeline:
     every uint32 carry-save column provably stays below 2**32, for the
@@ -10,8 +10,13 @@ Three analyzers prove properties of every design the repo can generate:
     identity), kernel scratch/out widths vs the proven requirement,
     Plan throughput sums, scheduler determinism/completeness, bank
     dispatch staticness under ``jax.eval_shape``;
+  * :mod:`.dataflow`   -- jaxpr-level abstract interpretation of every
+    Pallas launch a plan implies (with :mod:`.vmem`): hazard freedom
+    over scratch/output refs, BlockSpec/window bounds, the per-step
+    VMEM model and budget, and a static FLOPs/HBM-bytes roofline;
   * :mod:`.lint`       -- AST taint pass over the source tree flagging
-    Python control flow on traced values and non-static scheduler state.
+    Python control flow on traced values, non-static scheduler state
+    and interpret-mode environment reads outside the runtime shim.
 
 ``python -m repro.verify`` sweeps the full design registry plus the
 autotuner's enumeration vocabulary and writes ``VERIFY_report.json``
@@ -32,13 +37,14 @@ from .contracts import (check_coverage, check_widths, check_throughput,
 from .lint import lint_tree, lint_source
 
 __all__ = [
-    "intervals", "contracts", "lint",
-    "IntervalReport", "Violation", "VerificationError",
+    "intervals", "contracts", "lint", "dataflow", "vmem", "jaxpr_walk",
+    "IntervalReport", "Violation", "VerificationError", "DataflowError",
     "analyze", "check_coverage", "check_widths", "check_throughput",
     "check_fused_schedule", "check_fused_widths", "check_fused_plan",
     "check_all_schedulers", "check_bank_static",
     "lint_tree", "lint_source",
     "verify_instance", "verify_plan", "assert_plan", "verify_design",
+    "verify_plan_dataflow", "assert_plan_dataflow",
 ]
 
 #: substrates swept per instance (kernel skipped for signed configs,
@@ -60,6 +66,19 @@ class VerificationError(ValueError):
         super().__init__(
             f"{len(lines)} verification violation(s):\n  " +
             "\n  ".join(lines))
+
+
+class DataflowError(VerificationError):
+    """A Pallas launch the dataflow analyzer cannot prove safe.
+
+    Raised by :func:`assert_plan_dataflow`: a hazard, bounds, VMEM or
+    window-table finding on the launches a plan implies.
+    """
+
+
+# after DataflowError: dataflow imports the class at raise time
+from . import dataflow, jaxpr_walk, vmem            # noqa: E402
+from .dataflow import verify_plan_dataflow          # noqa: E402
 
 
 @functools.lru_cache(maxsize=4096)
@@ -108,6 +127,23 @@ def assert_plan(bits_a: int, bits_b: int, configs,
     violations = verify_plan(bits_a, bits_b, configs, throughput)
     if violations:
         raise VerificationError(violations)
+
+
+def assert_plan_dataflow(bits_a: int, bits_b: int, configs,
+                         budget=None) -> None:
+    """Raise :class:`DataflowError` unless every launch proves safe.
+
+    The fourth plan-time gate: traces (never executes) the per-instance
+    and fused Pallas launches the plan implies and rejects hazards,
+    out-of-bounds windows/block indices and VMEM model/budget breaks.
+    Results are cached per distinct launch geometry inside
+    :mod:`.dataflow`, so repeated gating is cheap.
+    """
+    violations = dataflow.verify_plan_dataflow(bits_a, bits_b,
+                                               tuple(configs),
+                                               budget=budget)
+    if violations:
+        raise DataflowError(violations)
 
 
 def verify_design(design) -> tuple:

@@ -14,6 +14,10 @@ Sections of the sweep (each contributes to ``VERIFY_report.json``):
   fused           bank-level fused-megakernel contracts of every
                   registry plan (super-geometry idle masks, SMEM table
                   consistency, window coverage, scratch domination);
+  dataflow        jaxpr-level static proofs of every Pallas launch the
+                  registry + vocabulary imply (both substrates): hazard
+                  freedom, window/block bounds, VMEM model/budget, and
+                  the static FLOPs/HBM roofline per launch;
   schedulers      determinism/completeness/makespan contracts of every
                   registered dispatch policy;
   bank            ``Bank.dispatch_fn`` staticness under eval_shape;
@@ -173,6 +177,71 @@ def sweep_fused() -> tuple:
     return results, violations
 
 
+def sweep_dataflow(widths) -> tuple:
+    """Static dataflow proofs of every Pallas launch the repo can plan.
+
+    Registry plans and the full autotuner vocabulary (both substrates:
+    per-instance ``mcim_fold`` launches and the fused megakernel), the
+    standalone kernels, and ragged/prime batch shapes through the
+    tiler.  Per launch: hazard freedom, window/block bounds, the VMEM
+    model/budget and the static roofline (``arith_intensity``).
+    Distinct launch geometries are analyzed once (cached), so the sweep
+    cost scales with geometry variety, not design count.
+    """
+    from repro.designs import registry
+    from repro.designs.compile import _plan_with_timing
+    from . import VerificationError, dataflow
+    results, violations = [], []
+
+    def plan_entry(bits_a, bits_b, configs):
+        reps = []
+        for substrate in ("kernel", "fused"):
+            reps.extend(dataflow.analyze_plan(bits_a, bits_b, configs,
+                                              substrate=substrate))
+        vs = [v for rep in reps for v in rep.violations]
+        return reps, vs
+
+    for name in sorted(registry.names()):
+        spec = registry.get(name)
+        try:
+            plan, _ = _plan_with_timing(spec)
+        except VerificationError:
+            continue              # already reported by sweep_registry
+        reps, vs = plan_entry(spec.bits_a, spec.bits_b, plan.configs)
+        violations.extend(vs)
+        results.append({
+            "design": name, "ok": not vs,
+            "launches": [{
+                "launch": r.name, "grid": list(r.grid),
+                "flops": r.flops, "hbm_bytes": r.hbm_bytes,
+                "arith_intensity": round(r.arith_intensity, 4),
+                "vmem_total_bytes": r.vmem.get("total_bytes"),
+                "ok": r.ok} for r in reps]})
+
+    for w in widths:
+        for cfg in _vocabulary():
+            reps, vs = plan_entry(w, w, ((1, cfg),))
+            violations.extend(vs)
+            results.append({"bits": w, "config": _cfg_label(cfg),
+                            "ok": not vs,
+                            "launches": [r.name for r in reps]})
+
+    for rep in dataflow.analyze_standalone():
+        violations.extend(rep.violations)
+        results.append({
+            "launch": rep.name, "grid": list(rep.grid),
+            "flops": rep.flops,
+            "arith_intensity": round(rep.arith_intensity, 4),
+            "ok": rep.ok})
+
+    for batch, rep in zip(dataflow.RAGGED_BATCHES,
+                          dataflow.analyze_tiling()):
+        violations.extend(rep.violations)
+        results.append({"launch": rep.name, "batch": batch,
+                        "grid": list(rep.grid), "ok": rep.ok})
+    return results, violations
+
+
 def sweep_bank(bits: int = 32) -> tuple:
     from repro.core import planner
     violations = []
@@ -219,6 +288,11 @@ def main(argv=None) -> int:
     all_violations.extend(vs)
     print(f"  fused:          {len(sections['fused'])} plans as one "
           f"launch, {len(vs)} violations")
+
+    sections["dataflow"], vs = sweep_dataflow(widths)
+    all_violations.extend(vs)
+    print(f"  dataflow:       {len(sections['dataflow'])} launch "
+          f"points, {len(vs)} violations")
 
     vs = contracts.check_all_schedulers()
     sections["schedulers"] = [{"cases": len(contracts.SCHEDULER_CASES),

@@ -33,6 +33,13 @@ Rules:
                       attributes -- per-call state breaks the static
                       (cts, n_ops) -> assignment contract the bank's
                       jitted dispatch relies on
+``interpret-env``     reading the ``REPRO_INTERPRET`` /
+                      ``REPRO_PALLAS_INTERPRET`` environment variables
+                      anywhere but ``kernels/runtime.py`` -- the one
+                      shim that owns interpret-mode resolution; a
+                      second reader can disagree with it mid-process
+                      and silently mix compiled and interpreted
+                      launches
 """
 from __future__ import annotations
 
@@ -280,6 +287,63 @@ def _scheduler_state_writes(tree: ast.Module, path: str) -> list:
     return out
 
 
+#: interpret-mode env vars only ``kernels/runtime.py`` may read
+_INTERPRET_ENV = frozenset({"REPRO_INTERPRET", "REPRO_PALLAS_INTERPRET"})
+
+
+def _reads_environ(node: ast.expr) -> str:
+    """The interpret-env key ``node`` reads, or None.
+
+    Matches ``os.environ[K]``, ``os.environ.get(K, ...)`` and
+    ``os.getenv(K, ...)`` for K in :data:`_INTERPRET_ENV` (any base
+    object named/ending in ``environ``/``getenv``, so aliased imports
+    are caught too).
+    """
+    def key_of(expr) -> str:
+        if isinstance(expr, ast.Constant) and \
+                isinstance(expr.value, str) and \
+                expr.value in _INTERPRET_ENV:
+            return expr.value
+        return None
+
+    def names_environ(expr) -> bool:
+        return (isinstance(expr, ast.Attribute)
+                and expr.attr == "environ") or \
+               (isinstance(expr, ast.Name) and expr.id == "environ")
+
+    if isinstance(node, ast.Subscript) and names_environ(node.value):
+        return key_of(node.slice)
+    if isinstance(node, ast.Call) and node.args:
+        f = node.func
+        if isinstance(f, ast.Attribute) and f.attr == "get" and \
+                names_environ(f.value):
+            return key_of(node.args[0])
+        if (isinstance(f, ast.Attribute) and f.attr == "getenv") or \
+                (isinstance(f, ast.Name) and f.id == "getenv"):
+            return key_of(node.args[0])
+    return None
+
+
+def _interpret_env_reads(tree: ast.Module, path: str) -> list:
+    """Flag interpret-mode env reads outside the runtime shim."""
+    norm = path.replace("\\", "/")
+    if norm.endswith("kernels/runtime.py"):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.Subscript, ast.Call)):
+            continue
+        key = _reads_environ(node)
+        if key is not None:
+            out.append(Violation(
+                "lint", "interpret-env", f"{path}:{node.lineno}",
+                f"reads {key} directly; interpret-mode resolution "
+                f"belongs to repro.kernels.runtime (a second reader "
+                f"can disagree with the shim and mix compiled and "
+                f"interpreted launches)"))
+    return out
+
+
 def lint_source(source: str, path: str = "<string>") -> list:
     """Lint one module's source text; returns Violations."""
     try:
@@ -294,6 +358,7 @@ def lint_source(source: str, path: str = "<string>") -> list:
             walker.visit(node)
             out.extend(walker.violations)
     out.extend(_scheduler_state_writes(tree, path))
+    out.extend(_interpret_env_reads(tree, path))
     return out
 
 

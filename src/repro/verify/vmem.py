@@ -1,0 +1,107 @@
+"""Static per-grid-step VMEM byte model of a Pallas launch.
+
+The paper equates a folded multiplier's "area" with the register/PPM
+resources live per clock; the TPU analogue is the VMEM working set live
+per grid step -- the operand blocks, the output block, every scratch
+ref and the prefetched SMEM scalars.  Each kernel package *declares*
+that figure (``vmem_bytes_per_step`` of its geometry module, carried on
+the :class:`~repro.kernels.introspect.LaunchContract`); this module
+measures the true figure from the traced launch and proves two rules:
+
+  vmem-model   the declared model must dominate the measured *fold
+               working set* (inputs + scratch + SMEM -- the state the
+               folded datapath keeps live; fb/ff models equal it
+               exactly, by construction from ``fold_geometry``)
+  vmem-budget  the full per-step residency (fold working set + output
+               block) must fit a configurable budget, default the TPU
+               v5e per-core VMEM
+
+A model that undercounts would let the autotuner's area/energy scoring
+(and the paper-table reproduction built on it) silently flatter a
+design; a budget overflow would fail at kernel compile time on real
+hardware -- both are caught here at *plan* time, with no execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.verify.intervals import Violation
+
+#: default per-step budget: one TPU v5e core's VMEM (16 MiB)
+DEFAULT_VMEM_BUDGET = 16 * 2 ** 20
+
+_ANALYZER = "dataflow"
+
+
+@dataclasses.dataclass(frozen=True)
+class VmemBreakdown:
+    """Measured per-grid-step bytes of one launch, by ref class."""
+    in_bytes: int
+    out_bytes: int
+    scratch_bytes: int
+    smem_bytes: int
+
+    @property
+    def fold_bytes(self) -> int:
+        """The folded datapath's live state (model-domination target)."""
+        return self.in_bytes + self.scratch_bytes + self.smem_bytes
+
+    @property
+    def total_bytes(self) -> int:
+        return self.fold_bytes + self.out_bytes
+
+    def as_dict(self) -> dict:
+        return {"in_bytes": self.in_bytes, "out_bytes": self.out_bytes,
+                "scratch_bytes": self.scratch_bytes,
+                "smem_bytes": self.smem_bytes,
+                "total_bytes": self.total_bytes}
+
+
+def _aval_bytes(aval) -> int:
+    n = 1
+    for d in aval.shape:
+        n *= int(d)
+    return n * np.dtype(aval.dtype).itemsize
+
+
+def measure(eqn) -> VmemBreakdown:
+    """Per-grid-step bytes of one traced ``pallas_call`` equation.
+
+    Reads the kernel jaxpr's ref avals (block-shaped, i.e. already
+    per-step) and classifies them with the grid mapping's operand
+    counts -- the measured figure can therefore never disagree with
+    what the kernel body actually addresses.
+    """
+    gm = eqn.params["grid_mapping"]
+    avals = [v.aval for v in eqn.params["jaxpr"].invars]
+    ni, nin = gm.num_index_operands, gm.num_inputs
+    nout = gm.num_outputs
+    smem = sum(_aval_bytes(a) for a in avals[:ni])
+    inb = sum(_aval_bytes(a) for a in avals[ni:ni + nin])
+    outb = sum(_aval_bytes(a) for a in avals[ni + nin:ni + nin + nout])
+    scr = sum(_aval_bytes(a) for a in avals[ni + nin + nout:])
+    return VmemBreakdown(in_bytes=inb, out_bytes=outb,
+                         scratch_bytes=scr, smem_bytes=smem)
+
+
+def check(breakdown: VmemBreakdown, model_bytes: int, where: str,
+          budget: int = None) -> list:
+    """Violations of the model-domination and budget rules."""
+    if budget is None:
+        budget = DEFAULT_VMEM_BUDGET
+    out = []
+    if model_bytes < breakdown.fold_bytes:
+        out.append(Violation(
+            _ANALYZER, "vmem-model", where,
+            f"declared vmem_bytes_per_step {model_bytes} undercounts the "
+            f"measured fold working set {breakdown.fold_bytes} "
+            f"(in={breakdown.in_bytes} scratch={breakdown.scratch_bytes} "
+            f"smem={breakdown.smem_bytes})"))
+    if breakdown.total_bytes > budget:
+        out.append(Violation(
+            _ANALYZER, "vmem-budget", where,
+            f"per-step residency {breakdown.total_bytes} B exceeds the "
+            f"VMEM budget {budget} B"))
+    return out
