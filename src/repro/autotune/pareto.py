@@ -183,6 +183,31 @@ class ParetoFront:
         return min(self.front,
                    key=lambda c: (sign * getattr(c, attr), c.key))
 
+    def best_meeting(self, min_throughput, objective: str = "area"):
+        """Cheapest front point whose throughput covers ``min_throughput``
+        (ops/cycle), or None when no front point is fast enough.
+
+        This is the serving autoscaler's consultation hook
+        (``repro.serving.Autoscaler.recommend``): under sustained load
+        below the provisioned TP, re-plan onto the least-``objective``
+        design that still sustains the observed rate.  Unlike
+        :meth:`best` it filters on a throughput floor first, and returns
+        None instead of raising so a controller can fall back to "keep
+        the current design".
+        """
+        try:
+            attr, maximize = OBJECTIVES[objective]
+        except KeyError:
+            raise ValueError(f"objective must be one of "
+                             f"{sorted(OBJECTIVES)}") from None
+        feasible = [c for c in self.front
+                    if float(c.spec.throughput) >= float(min_throughput)]
+        if not feasible:
+            return None
+        sign = -1.0 if maximize else 1.0
+        return min(feasible,
+                   key=lambda c: (sign * getattr(c, attr), c.key))
+
     def describe(self) -> str:
         lines = [f"ParetoFront[{len(self.front)} points, "
                  f"{len(self.dominated)} dominated, "

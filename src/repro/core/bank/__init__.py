@@ -28,7 +28,9 @@ owns the bank plus timing/area/provenance.
 from .schedule import (Scheduler, RoundRobinScheduler, GreedyScheduler,
                        StreamingScheduler, SCHEDULERS, register_scheduler,
                        get_scheduler, round_robin_schedule, greedy_schedule,
-                       streaming_schedule, uniform_arrivals)
+                       streaming_schedule, uniform_arrivals,
+                       completion_cycles, latency_histogram,
+                       histogram_percentile)
 from .backends import (InstanceBackend, BACKENDS, CAPABILITIES,
                        register_backend, get_backend, registered_backends)
 from .engine import (Bank, BankReport, InstanceReport, execute, last_report)
@@ -40,6 +42,7 @@ __all__ = [
     "StreamingScheduler", "SCHEDULERS", "register_scheduler",
     "get_scheduler", "round_robin_schedule", "greedy_schedule",
     "streaming_schedule", "uniform_arrivals",
+    "completion_cycles", "latency_histogram", "histogram_percentile",
     # backend layer
     "InstanceBackend", "BACKENDS", "CAPABILITIES", "register_backend",
     "get_backend", "registered_backends",

@@ -33,7 +33,8 @@ from .. import limbs as L
 from ..mcim import MCIMConfig
 from ..planner import Plan
 from .backends import BACKENDS, cached_mul, get_backend
-from .schedule import get_scheduler
+from .schedule import (completion_cycles, get_scheduler,
+                       histogram_percentile, latency_histogram)
 
 
 # ------------------------------------------------------------------ reports
@@ -59,6 +60,11 @@ class BankReport:
     plan_throughput: Fraction
     working_set_bytes: int            # sum of per-instance VMEM footprints
     scheduler: str = "round_robin"    # policy that produced the makespan
+    #: per-request latency histogram, sorted ((cycles, count), ...):
+    #: admission (the policy's arrival trace, cycle 0 for batch
+    #: policies) to completion -- the same accounting path the online
+    #: serving layer reports p50/p99 from
+    latency_hist: tuple = ()
     # filled in by CompiledDesign.report() (the bank itself has no spec,
     # so no clock/stress context to model power with)
     energy_per_op_pj: float | None = None
@@ -80,6 +86,19 @@ class BankReport:
         if self.energy_per_op_pj is None:
             return None
         return self.batch * self.energy_per_op_pj
+
+    def latency_percentile(self, q: float):
+        """Latency (cycles) at quantile ``q`` of the per-request
+        histogram; None for an empty batch."""
+        return histogram_percentile(self.latency_hist, q)
+
+    @property
+    def latency_p50(self):
+        return self.latency_percentile(0.50)
+
+    @property
+    def latency_p99(self):
+        return self.latency_percentile(0.99)
 
 
 # ------------------------------------------------------------------ the bank
@@ -150,6 +169,13 @@ class Bank:
         insts = tuple(
             InstanceReport(cfg, len(ops), len(ops) * cfg.ct)
             for cfg, ops in zip(self.instances, assign))
+        # per-request latency: completion minus admission, where
+        # admission is the policy's own arrival trace (cycle 0 for the
+        # batch policies).  Arrival-aware policies expose arrivals_for.
+        arrivals = sched.arrivals_for(batch) \
+            if hasattr(sched, "arrivals_for") else (0,) * batch
+        finish = completion_cycles(self._cts, assign, arrivals)
+        hist = latency_histogram(f - a for f, a in zip(finish, arrivals))
         footprints = tuple(
             be.working_set(cfg, self.la, self.lb, self.tile_b)
             for cfg, be in zip(self.instances, self._backends))
@@ -159,7 +185,8 @@ class Bank:
         return BankReport(batch=batch, cycles=cycles, instances=insts,
                           plan_throughput=self.plan.throughput,
                           working_set_bytes=ws,
-                          scheduler=sched.name)
+                          scheduler=sched.name,
+                          latency_hist=hist)
 
     # -------------------------------------------------------------- execute
     def dispatch_fn(self, batch: int):

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Protocol, runtime_checkable
 
 
@@ -156,6 +157,67 @@ def uniform_arrivals(n_ops: int, per_cycle: int) -> tuple:
     return tuple(k // per_cycle for k in range(n_ops))
 
 
+# --------------------------------------------------- completion accounting
+
+def completion_cycles(cts: tuple, assignment: tuple,
+                      arrivals: tuple | None = None) -> tuple:
+    """Per-op completion cycle reconstructed from an assignment.
+
+    Every registered policy is work-conserving and issues each
+    instance's ops in the order its assignment tuple lists them, so the
+    per-instance chain ``issue_k = max(prev_finish, arrival_k)``,
+    ``finish_k = issue_k + ct`` reproduces the simulation exactly: an
+    instance whose next assigned op has arrived never idles (if it
+    could idle, the polling loop would have handed the op to it -- or
+    to an earlier-polled free instance, contradicting the assignment).
+    This is the single accounting path both ``Bank.report``'s latency
+    histogram and the serving layer's online metrics derive from.
+    """
+    n_ops = sum(len(ops) for ops in assignment)
+    arr = (0,) * n_ops if arrivals is None else tuple(arrivals)
+    if len(arr) != n_ops:
+        raise ValueError(
+            f"arrival trace has {len(arr)} entries for {n_ops} ops")
+    finish = [0] * n_ops
+    for ops, ct in zip(assignment, cts):
+        free = 0
+        for k in ops:
+            free = max(free, arr[k]) + ct
+            finish[k] = free
+    return tuple(finish)
+
+
+def latency_histogram(latencies) -> tuple:
+    """Collapse per-request latencies into sorted ((latency, count), ...).
+
+    The compact exchange format between the bank's offline reports and
+    the serving layer's online metrics (identical bucketing: exact
+    integer cycles, no binning)."""
+    counts = {}
+    for lat in latencies:
+        counts[lat] = counts.get(lat, 0) + 1
+    return tuple(sorted(counts.items()))
+
+
+def histogram_percentile(hist: tuple, q: float):
+    """Smallest latency whose cumulative count covers quantile ``q``.
+
+    ``hist`` is ``latency_histogram`` output; returns None when empty.
+    """
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"quantile must be in [0, 1], got {q}")
+    total = sum(c for _, c in hist)
+    if not total:
+        return None
+    need = max(1, math.ceil(q * total))
+    seen = 0
+    for lat, c in hist:
+        seen += c
+        if seen >= need:
+            return lat
+    return hist[-1][0]
+
+
 # ------------------------------------------------------------- registry
 
 @dataclasses.dataclass(frozen=True)
@@ -184,17 +246,23 @@ class StreamingScheduler:
     arrival_rate: int | None = None
     name: str = "streaming"
 
-    def schedule(self, cts: tuple, n_ops: int) -> tuple:
+    def arrivals_for(self, n_ops: int) -> tuple:
+        """The arrival trace this policy dispatches ``n_ops`` against
+        (``Bank.report`` asks for it to turn completions into
+        admission-to-completion latencies)."""
         if self.arrivals is not None:
             trace = tuple(self.arrivals)[:n_ops]
             if len(trace) < n_ops:
                 raise ValueError(
                     f"arrival trace has {len(trace)} entries, need {n_ops}")
-        elif self.arrival_rate is not None:
-            trace = uniform_arrivals(n_ops, self.arrival_rate)
-        else:
-            trace = (0,) * n_ops
-        return streaming_schedule(tuple(cts), n_ops, trace)
+            return trace
+        if self.arrival_rate is not None:
+            return uniform_arrivals(n_ops, self.arrival_rate)
+        return (0,) * n_ops
+
+    def schedule(self, cts: tuple, n_ops: int) -> tuple:
+        return streaming_schedule(tuple(cts), n_ops,
+                                  self.arrivals_for(n_ops))
 
 
 SCHEDULERS = {

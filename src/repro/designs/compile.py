@@ -151,6 +151,30 @@ class CompiledDesign:
         sched = StreamingScheduler(arrivals=trace)
         return self.bank.report(len(trace), scheduler=sched)
 
+    def serve(self, requests, *, replicas: int = 1,
+              round_cycles: int | None = None, steal: bool = True,
+              autoscaler=None, check: bool = False):
+        """Serve a request stream *online* through this design.
+
+        Where :meth:`replay` scores a finished arrival trace,
+        ``serve`` runs the full event loop of
+        :class:`repro.serving.Worker`: SLO admission control, EDF
+        dispatch in bank rounds (one fused Pallas launch per round on
+        the fused backend), work stealing across ``replicas``
+        independent bank replicas, and optional autoscaling (pass a
+        ``repro.serving.Autoscaler``).  ``check=True`` verifies every
+        response against the Python-bigint oracle.
+
+        Returns ``(report, responses)``: the
+        :class:`~repro.serving.ServingReport` and the per-request
+        ``{rid: Response}`` outcomes.
+        """
+        from repro.serving import Worker
+        worker = Worker(self, replicas=replicas, round_cycles=round_cycles,
+                        steal=steal, autoscaler=autoscaler, check=check)
+        report = worker.run(requests)
+        return report, worker.responses
+
     # --------------------------------------------------------- properties
     @property
     def throughput(self):

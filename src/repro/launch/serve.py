@@ -48,6 +48,7 @@ class ServeEngine:
         self.request_of_slot = [-1] * slots
         self.cycle = 0             # engine steps taken (decode cycles)
         self._arrivals = []        # (request_id, admission cycle)
+        self._completions = {}     # request_id -> completion cycle
         self._cache_batch_axes = None
         self._decode = jax.jit(
             lambda p, c, t, pos: model.decode_step(p, c, t, pos, mesh),
@@ -156,7 +157,24 @@ class ServeEngine:
                 self.outputs[self.request_of_slot[slot]].append(
                     int(nxt[slot]))
 
+    def completion_trace(self) -> tuple:
+        """Completion cycles aligned with ``arrival_trace()`` (same
+        request order), so per-request end-to-end latency is just the
+        elementwise difference.  Requests still in flight report -1."""
+        return tuple(self._completions.get(rid, -1)
+                     for rid, _ in self._arrivals)
+
+    def latency_trace(self) -> tuple:
+        """Per-request end-to-end engine cycles (admission to finish),
+        in arrival order; in-flight requests are excluded."""
+        return tuple(done - arr for (_, arr), done
+                     in zip(self._arrivals, self.completion_trace())
+                     if done >= 0)
+
     def finish(self, slot: int) -> None:
+        rid = self.request_of_slot[slot]
+        if rid >= 0:
+            self._completions[rid] = self.cycle
         self.live[slot] = False
         self.request_of_slot[slot] = -1
 
@@ -214,6 +232,7 @@ def main(argv=None):
         # end-to-end wiring: the real admission trace drives the bank
         # layer's streaming scheduler through the designs facade
         from repro import designs
+        from repro.core.bank import histogram_percentile, latency_histogram
         design = designs.generate(args.mcim_design)
         rep = design.replay(eng.arrival_trace())
         print(f"[serve] mcim replay of {len(eng.arrival_trace())} "
@@ -221,6 +240,16 @@ def main(argv=None):
               f"{design.plan.describe()}: makespan {rep.cycles} bank "
               f"cycles, {rep.measured_throughput} ops/cycle "
               f"(scheduler={rep.scheduler})")
+        # end-to-end latency, both sides of the wiring: what the engine
+        # measured (admission -> finish) and what the bank's replay
+        # attributes to dispatch (admission -> retire), one accounting
+        # path (core.bank.schedule histograms) for both
+        eng_hist = latency_histogram(eng.latency_trace())
+        print(f"[serve] engine latency p50/p99 = "
+              f"{histogram_percentile(eng_hist, 0.50)}/"
+              f"{histogram_percentile(eng_hist, 0.99)} engine cycles; "
+              f"bank replay latency p50/p99 = "
+              f"{rep.latency_p50}/{rep.latency_p99} bank cycles")
     return eng
 
 

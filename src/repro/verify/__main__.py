@@ -294,12 +294,18 @@ def main(argv=None) -> int:
     print(f"  dataflow:       {len(sections['dataflow'])} launch "
           f"points, {len(vs)} violations")
 
+    # the serving package registers its slo_edf policy at import: pull
+    # it in before the sweep so an unverifiable serving scheduler fails
+    # CI here (and is therefore unplannable)
+    import repro.serving  # noqa: F401
+    from repro.core.bank.schedule import SCHEDULERS
     vs = contracts.check_all_schedulers()
     sections["schedulers"] = [{"cases": len(contracts.SCHEDULER_CASES),
+                               "policies": sorted(SCHEDULERS),
                                "ok": not vs}]
     all_violations.extend(vs)
     print(f"  schedulers:     {len(contracts.SCHEDULER_CASES)} cases x "
-          f"all policies, {len(vs)} violations")
+          f"{len(SCHEDULERS)} policies, {len(vs)} violations")
 
     sections["bank"], vs = sweep_bank()
     all_violations.extend(vs)

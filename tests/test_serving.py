@@ -1,0 +1,287 @@
+"""Integration tests for the online serving subsystem.
+
+The worker-loop contracts the ISSUE's bench gates rely on, checked on
+real compiled designs: zero SLO violations by construction, refusals
+only with infeasibility evidence, bit-exact responses vs the bigint
+oracle across registry design points (including the fractional-TP
+tp3p5_w32 bank), work stealing under a skewed router, autoscaling, the
+shared latency-histogram accounting path, and the verifier/lint
+coverage of the new tree.
+"""
+import dataclasses
+import pathlib
+from fractions import Fraction
+
+import numpy as np
+import pytest
+
+from repro import designs
+from repro.core import limbs as L
+from repro.core.bank import Bank
+from repro.core.bank import schedule as S
+from repro.serving import (Autoscaler, SLOScheduler, Worker, admissible,
+                           bursty_arrivals, diurnal_arrivals,
+                           earliest_completion, edf_schedule,
+                           poisson_arrivals, synthesize)
+
+#: (name, below-TP load, overload) -- covers a pure folded point, the
+#: paper's fractional-TP mixed bank, and the wide CT combination
+POINTS = ("tbl8_w32_relaxed", "tp3p5_w32", "tp5over6_w128")
+
+
+def _requests(design, load, n, seed, budget_mult=32):
+    tp = float(design.plan.throughput)
+    budget = max(8, int(budget_mult / tp))
+    arr = poisson_arrivals(n, load * tp, seed=seed)
+    return synthesize(arr, design.spec.bits_a, design.spec.bits_b,
+                      budget=budget, seed=seed + 1)
+
+
+# ------------------------------------------------------------ registration
+
+def test_slo_edf_registered_and_contract_clean():
+    import repro.serving  # noqa: F401  (registers at import)
+    from repro.verify import contracts
+    assert "slo_edf" in S.SCHEDULERS
+    for cts, n_ops in contracts.SCHEDULER_CASES:
+        assert not list(contracts.check_scheduler(
+            S.SCHEDULERS["slo_edf"], cts, n_ops))
+
+
+def test_slo_default_reduces_to_greedy():
+    for cts in [(1,), (2, 3), (1, 1, 2), (1, 2, 3, 4)]:
+        for n in (0, 1, 7, 23):
+            assert SLOScheduler().schedule(cts, n) == \
+                S.greedy_schedule(cts, n)
+
+
+def test_edf_orders_by_deadline():
+    # two ops, one instance: the tighter deadline issues first even
+    # though it has the later index
+    assign, makespan = edf_schedule((2,), 2, (0, 0), (100, 4))
+    assert assign == ((1, 0),)
+    assert makespan == 4
+    # deadline traces must match n_ops
+    with pytest.raises(ValueError):
+        edf_schedule((2,), 3, (0, 0, 0), (1, 2))
+
+
+def test_admission_predicates():
+    cts, free = (1, 2), [5, 0]
+    # best: instance 1 issues at max(0, 3)=3, retires 5
+    assert earliest_completion(cts, free, 3) == 5
+    assert admissible(cts, free, 3, 5)
+    assert not admissible(cts, free, 3, 4)
+
+
+# ------------------------------------------------------- histogram helpers
+
+def test_completion_cycles_matches_schedule_makespan():
+    cts = (1, 2, 3)
+    for n in (0, 1, 5, 17):
+        assign, makespan = S.greedy_schedule(cts, n)
+        finish = S.completion_cycles(cts, assign)
+        assert len(finish) == n
+        assert (max(finish) if n else 0) == makespan
+
+
+def test_histogram_percentiles():
+    hist = S.latency_histogram([3, 1, 1, 7])
+    assert hist == ((1, 2), (3, 1), (7, 1))
+    assert S.histogram_percentile(hist, 0.5) == 1
+    assert S.histogram_percentile(hist, 0.75) == 3
+    assert S.histogram_percentile(hist, 0.99) == 7
+    assert S.histogram_percentile((), 0.5) is None
+    with pytest.raises(ValueError):
+        S.histogram_percentile(hist, 1.5)
+
+
+def test_bank_report_latency_hist():
+    design = designs.generate("tbl8_w32_relaxed")
+    rep = design.report(8)
+    total = sum(c for _, c in rep.latency_hist)
+    assert total == 8
+    assert rep.latency_p50 is not None
+    assert rep.latency_p99 >= rep.latency_p50
+    # streaming replay: latencies measured from the real arrival trace
+    trace = (0, 0, 4, 4, 9)
+    rep2 = design.replay(trace)
+    assert sum(c for _, c in rep2.latency_hist) == len(trace)
+
+
+# ------------------------------------------------------------- worker loop
+
+@pytest.mark.parametrize("name", POINTS)
+def test_serve_below_tp_zero_violations_bit_exact(name):
+    design = designs.generate(name)
+    reqs = _requests(design, 0.7, 40, seed=11)
+    rep, resp = design.serve(reqs, check=True)
+    assert rep.n_requests == 40
+    assert len(resp) == 40
+    assert rep.slo_violations == 0
+    assert rep.n_refused == 0
+    assert rep.bit_exact is True
+    assert all(r.met_deadline for r in resp.values())
+    # admission proof on every response
+    assert all(r.earliest_possible <= r.deadline for r in resp.values())
+    assert all(r.arrival <= r.issue < r.finish for r in resp.values())
+
+
+def test_serve_overload_refuses_with_evidence():
+    design = designs.generate("tp3p5_w32")
+    reqs = _requests(design, 2.5, 120, seed=13, budget_mult=24)
+    rep, resp = design.serve(reqs, check=True)
+    assert rep.slo_violations == 0          # admitted always meet SLO
+    assert rep.n_refused > 0                # the excess is refused
+    assert rep.bit_exact is True
+    refused = [r for r in resp.values() if not r.admitted]
+    assert all(r.earliest_possible > r.deadline for r in refused)
+    # graceful degradation, not collapse
+    assert rep.goodput >= 0.6 * float(Fraction(rep.provisioned_tp))
+
+
+def test_serve_is_deterministic():
+    design = designs.generate("tbl8_w32_relaxed")
+    reqs = _requests(design, 0.9, 40, seed=17)
+    rep1, resp1 = design.serve(reqs, replicas=2)
+    rep2, resp2 = design.serve(reqs, replicas=2)
+    assert resp1 == resp2
+    assert rep1.latency_hist == rep2.latency_hist
+    assert rep1.steals == rep2.steals
+
+
+def test_work_stealing_under_skewed_router():
+    design = designs.generate("tp3p5_w32")
+    tp = float(design.plan.throughput)
+    arr = bursty_arrivals(80, 1.2 * tp, seed=19, burst=8)
+    reqs = synthesize(arr, 32, 32, budget=24, seed=20)
+    # even rids pin every request's home to replica 0: only the work
+    # stealer can use replica 1
+    skewed = tuple(dataclasses.replace(r, rid=2 * r.rid) for r in reqs)
+    rep, resp = design.serve(skewed, replicas=2, check=True)
+    assert rep.steals > 0
+    assert any(r.stolen and r.replica == 1 for r in resp.values())
+    assert rep.slo_violations == 0
+    assert rep.bit_exact is True
+    # stealing must strictly help: a no-steal run of the same stream
+    # cannot beat it on completions
+    rep_ns, _ = design.serve(skewed, replicas=2, steal=False)
+    assert rep.n_completed >= rep_ns.n_completed
+
+
+def test_round_batches_bucketed_power_of_two():
+    from repro.serving.worker import _bucket
+    assert [_bucket(n) for n in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8, 8, 16]
+    design = designs.generate("tbl8_w32_relaxed")
+    reqs = _requests(design, 0.8, 50, seed=23)
+    w = Worker(design)
+    w.run(reqs)
+    # ragged rounds share a bounded set of compiled batch sizes
+    for rep in w.replicas:
+        sizes = set(rep.bank._compiled)
+        assert all(s & (s - 1) == 0 for s in sizes)
+
+
+def test_fused_round_is_one_launch():
+    design = designs.generate("tp3p5_w32")
+    bank = Bank(design.plan, 32, 32, backend="fused")
+    assert bank.launch_count(16) == 1
+
+
+# -------------------------------------------------------------- autoscaler
+
+def test_autoscaler_up_immediate_down_patient():
+    a = Autoscaler(Fraction(1, 2), max_replicas=4, ema=1.0, patience=2)
+    # burst: rate 1.2 ops/cy vs 0.5*0.85 per replica -> needs 3
+    assert a.observe(16, 19, 16, live=1) == 3
+    # one quiet window is not enough to scale down...
+    assert a.observe(32, 1, 16, live=3) == 3
+    # ...two consecutive are
+    assert a.observe(48, 1, 16, live=3) == 1
+
+
+def test_autoscaler_worker_scales_on_diurnal_trace():
+    design = designs.generate("tbl8_w32_relaxed")
+    tp = float(design.plan.throughput)
+    scaler = Autoscaler(design.plan.throughput, max_replicas=4,
+                        ema=0.6, patience=2)
+    arr = diurnal_arrivals(120, 1.2 * tp, seed=29, period=128)
+    reqs = synthesize(arr, 32, 32, budget=256, seed=30)
+    rep, _ = design.serve(reqs, autoscaler=scaler, check=True)
+    peaks = [n for _, n in rep.replica_timeline]
+    assert max(peaks) > 1                   # scaled up under the peak
+    assert rep.slo_violations == 0
+    assert rep.bit_exact is True
+
+
+def test_autoscaler_recommends_from_pareto_front():
+    from repro.autotune.pareto import Candidate, ParetoFront
+    from repro.core.mcim import MCIMConfig
+
+    def cand(tp, area):
+        return Candidate(
+            spec=designs.DesignSpec(32, 32, Fraction(tp)),
+            configs=((1, MCIMConfig(arch="fb", ct=2)),),
+            area_um2=area, latency_cycles=2, fmax_ghz=1.0,
+            energy_per_op_pj=1.0, peak_power_mw=1.0, slack_ns=(0.0,))
+
+    front = ParetoFront([cand("1/2", 100.0), cand("7/2", 900.0)])
+    a = Autoscaler(Fraction(7, 2), ema=1.0)
+    a.observe(16, 4, 16, live=1)            # sustained rate 0.25/cy
+    rec = a.recommend(front)
+    assert rec is not None
+    assert rec.spec.throughput == Fraction(1, 2)   # the cheaper point
+    # nothing on the front covers 10 ops/cy
+    assert front.best_meeting(10.0) is None
+    with pytest.raises(ValueError):
+        front.best_meeting(0.1, objective="nope")
+    # when load fills the provisioned design, keep it
+    a.rate = 3.6
+    assert a.recommend(front) is None
+
+
+# ------------------------------------------------- launch-layer satellites
+
+def test_serve_engine_completion_trace():
+    from repro.launch.serve import ServeEngine
+    eng = ServeEngine.__new__(ServeEngine)   # no model needed for the
+    eng._arrivals = [(0, 0), (1, 0), (2, 4)]  # accounting-path surface
+    eng._completions = {}
+    eng.live = np.array([True, True, False])
+    eng.request_of_slot = [1, 0, -1]
+    eng.cycle = 9
+    eng.finish(0)                            # rid 1 finishes at cycle 9
+    assert eng.completion_trace() == (-1, 9, -1)
+    eng.cycle = 12
+    eng.finish(1)                            # rid 0 finishes at cycle 12
+    assert eng.completion_trace() == (12, 9, -1)
+    assert eng.latency_trace() == (12, 9)    # rid 2 still in flight
+    eng.finish(2)                            # empty slot: no-op record
+    assert eng.completion_trace() == (12, 9, -1)
+
+
+# ---------------------------------------------------------------- hygiene
+
+def test_serving_tree_is_lint_clean():
+    import repro.serving
+    from repro.verify import lint
+    root = pathlib.Path(repro.serving.__file__).parent
+    assert not lint.lint_tree(root)
+
+
+def test_synthesize_validates():
+    with pytest.raises(ValueError):
+        synthesize((3, 1), 32, 32, budget=8)          # decreasing trace
+    with pytest.raises(ValueError):
+        synthesize((0, 1), 32, 32, budget=0)          # no budget
+    with pytest.raises(ValueError):
+        synthesize((0,), 32, 32, budget=8,
+                   width_classes=((64, 32),))         # wider than design
+    reqs = synthesize((0, 0, 5), 32, 32, budget=8,
+                      width_classes=((32, 32), (16, 8)))
+    assert [r.tenant for r in reqs] == [0, 1, 0]
+    assert all(r.deadline == r.arrival + 8 for r in reqs)
+    # narrow tenants zero-extend into the design's limbs
+    narrow = reqs[1]
+    assert L.from_limbs(np.asarray(narrow.a, np.uint32)) < 1 << 16
+    assert len(narrow.a) == L.n_limbs_for_bits(32)

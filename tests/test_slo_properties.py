@@ -1,0 +1,150 @@
+"""Hypothesis property tests for SLO scheduling and admission control.
+
+Pure-scheduler properties (no jax) run on wide random grids; the
+worker-loop properties -- no admitted request ever misses its deadline,
+refusals only when provably infeasible, bursty-trace bit-exactness vs
+the bigint oracle -- execute a real compiled design, so they run fewer
+examples on small request sets.
+"""
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bank import schedule as S
+from repro.serving import slo
+from repro.serving.requests import (bursty_arrivals, poisson_arrivals,
+                                    synthesize)
+
+CTS = st.lists(st.integers(min_value=1, max_value=8),
+               min_size=1, max_size=6).map(tuple)
+N_OPS = st.integers(min_value=0, max_value=60)
+SEEDS = st.integers(min_value=0, max_value=2**16)
+
+
+@st.composite
+def edf_cases(draw):
+    cts = draw(CTS)
+    n = draw(N_OPS)
+    arrivals = tuple(sorted(
+        draw(st.lists(st.integers(min_value=0, max_value=40),
+                      min_size=n, max_size=n))))
+    deadlines = tuple(a + draw(st.integers(min_value=1, max_value=60))
+                      for a in arrivals)
+    return cts, n, arrivals, deadlines
+
+
+@settings(max_examples=200, deadline=None)
+@given(case=edf_cases())
+def test_edf_complete_and_duplicate_free(case):
+    cts, n, arrivals, deadlines = case
+    assign, makespan = slo.edf_schedule(cts, n, arrivals, deadlines)
+    flat = sorted(op for ops in assign for op in ops)
+    assert flat == list(range(n)), "incomplete or duplicated"
+    assert len(assign) == len(cts)
+    assert makespan >= 0
+
+
+@settings(max_examples=200, deadline=None)
+@given(case=edf_cases())
+def test_edf_deterministic_and_chain_reconstructible(case):
+    cts, n, arrivals, deadlines = case
+    first = slo.edf_schedule(cts, n, arrivals, deadlines)
+    assert slo.edf_schedule(cts, n, arrivals, deadlines) == first
+    # per-instance issue chains reconstruct the makespan exactly: the
+    # one-accounting-path property Bank.report and the worker share
+    assign, makespan = first
+    finish = S.completion_cycles(cts, assign, arrivals)
+    assert (max(finish) if n else 0) == makespan
+    # no op finishes before its arrival + its instance's cycle time
+    for ops, ct in zip(assign, cts):
+        for k in ops:
+            assert finish[k] >= arrivals[k] + ct
+
+
+@settings(max_examples=200, deadline=None)
+@given(cts=CTS, n=N_OPS)
+def test_slo_without_deadlines_is_greedy(cts, n):
+    assert slo.SLOScheduler().schedule(cts, n) == S.greedy_schedule(cts, n)
+
+
+@settings(max_examples=200, deadline=None)
+@given(cts=CTS,
+       free=st.lists(st.integers(min_value=0, max_value=50),
+                     min_size=1, max_size=6),
+       arrival=st.integers(min_value=0, max_value=50))
+def test_earliest_completion_is_a_lower_bound(cts, free, arrival):
+    free = (free * len(cts))[:len(cts)]
+    best = slo.earliest_completion(cts, free, arrival)
+    # achievable by some instance...
+    assert any(max(f, arrival) + ct == best
+               for f, ct in zip(free, cts))
+    # ...and no instance beats it
+    assert all(max(f, arrival) + ct >= best
+               for f, ct in zip(free, cts))
+    assert best >= arrival + min(cts)
+
+
+@settings(max_examples=100, deadline=None)
+@given(lat=st.lists(st.integers(min_value=0, max_value=30), max_size=50),
+       q1=st.floats(min_value=0.0, max_value=1.0),
+       q2=st.floats(min_value=0.0, max_value=1.0))
+def test_histogram_percentile_monotone(lat, q1, q2):
+    hist = S.latency_histogram(lat)
+    assert sum(c for _, c in hist) == len(lat)
+    if not lat:
+        assert S.histogram_percentile(hist, q1) is None
+        return
+    lo, hi = sorted((q1, q2))
+    assert S.histogram_percentile(hist, lo) <= \
+        S.histogram_percentile(hist, hi)
+    assert S.histogram_percentile(hist, 1.0) == max(lat)
+
+
+# --------------------------------------------------- worker-loop properties
+
+@pytest.fixture(scope="module")
+def design():
+    from repro import designs
+    return designs.generate("tbl8_w32_relaxed")
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=SEEDS,
+       load=st.floats(min_value=0.3, max_value=2.5),
+       budget=st.integers(min_value=4, max_value=80))
+def test_admissions_meet_deadline_refusals_infeasible(design, seed, load,
+                                                      budget):
+    tp = float(design.plan.throughput)
+    arr = poisson_arrivals(16, load * tp, seed=seed)
+    reqs = synthesize(arr, 32, 32, budget=budget, seed=seed + 1)
+    rep, resp = design.serve(reqs)
+    assert rep.slo_violations == 0
+    for r in resp.values():
+        if r.admitted:
+            # the committed slot honours the admission proof
+            assert r.arrival <= r.issue < r.finish <= r.deadline
+            assert r.earliest_possible <= r.deadline
+        else:
+            # refusal evidence: even the best instance was too late
+            assert r.earliest_possible > r.deadline
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=SEEDS)
+def test_bursty_trace_bit_exact_vs_oracle(design, seed):
+    tp = float(design.plan.throughput)
+    arr = bursty_arrivals(20, 1.1 * tp, seed=seed, burst=5)
+    reqs = synthesize(arr, 32, 32, budget=100, seed=seed + 1,
+                      width_classes=((32, 32), (16, 24), (8, 8)))
+    rep, resp = design.serve(reqs, replicas=2, check=True)
+    assert rep.n_checked == rep.n_admitted
+    assert rep.bit_exact is True
+    # independent re-check through the Request's own oracle
+    for req in reqs:
+        r = resp[req.rid]
+        if r.admitted:
+            import numpy as np
+            from repro.core import limbs as L
+            assert L.from_limbs(np.asarray(r.product, np.uint32)) == \
+                req.oracle()
